@@ -1,0 +1,71 @@
+"""Table III: converged LP solutions across DNNs x dataflows x platforms.
+
+GA vs PPO2 vs Con'X(global), objective latency, area constraint.  The
+paper's pattern: GA NANs out under tight constraints (IoT/IoTx); PPO2 and
+Con'X always find feasible points; Con'X is as good or better.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import env as env_lib, ga as ga_lib, reinforce, \
+    rl_baselines, search
+from repro.costmodel import dataflows as dfl
+from repro.costmodel import workloads
+
+ROWS_FULL = [
+    ("mobilenet_v2", "dla", "iot"), ("mobilenet_v2", "eye", "iotx"),
+    ("mobilenet_v2", "shi", "iotx"),
+    ("mnasnet", "dla", "cloud"), ("mnasnet", "eye", "iotx"),
+    ("mnasnet", "shi", "iotx"),
+    ("resnet50", "dla", "cloud"), ("resnet50", "eye", "cloud"),
+    ("resnet50", "shi", "cloud"),
+    ("gnmt", "dla", "iotx"), ("gnmt", "eye", "iot"), ("gnmt", "shi", "iot"),
+    ("transformer", "dla", "iotx"), ("transformer", "eye", "iot"),
+    ("transformer", "shi", "iot"),
+    ("ncf", "dla", "iotx"), ("ncf", "eye", "cloud"), ("ncf", "shi", "iot"),
+]
+ROWS_QUICK = [
+    ("mobilenet_v2", "dla", "iot"), ("mobilenet_v2", "eye", "iotx"),
+    ("mnasnet", "dla", "cloud"), ("gnmt", "dla", "iotx"),
+    ("transformer", "eye", "iot"), ("ncf", "dla", "iotx"),
+]
+
+
+def run(budget_name: str = "quick") -> dict:
+    b = common.budget(budget_name)
+    eps = b["eps"]
+    rows = ROWS_FULL if b["rows"] == "all" else ROWS_QUICK
+    out_rows, payload = [], []
+    n_ga_nan = n_conx_best = 0
+    for model, df, plat in rows:
+        wl = workloads.get_workload(model)
+        ecfg = env_lib.EnvConfig(platform=plat,
+                                 dataflow=dfl.DATAFLOW_NAMES.index(df))
+        ga_v = float(ga_lib.baseline_ga(
+            wl, ecfg, ga_lib.GAConfig(population=100,
+                                      generations=max(eps // 100, 1))
+        ).best_value)
+        ppo_state, _ = rl_baselines.run_ac_search(
+            wl, ecfg, rl_baselines.ACConfig(algo="ppo2", epochs=eps,
+                                            episodes_per_epoch=1))
+        ppo_v = float(ppo_state.best_value)
+        conx_v = search.confuciux_search(
+            wl, ecfg, rcfg=reinforce.ReinforceConfig(
+                epochs=eps, episodes_per_epoch=1),
+            fine_tune=False).best_value
+        n_ga_nan += ga_v == float("inf")
+        n_conx_best += conx_v <= min(ga_v, ppo_v) * 1.001
+        payload.append({"model": model, "dataflow": df, "platform": plat,
+                        "ga": ga_v, "ppo2": ppo_v, "conx_global": conx_v})
+        out_rows.append([f"{model}-{df}", plat, ga_v, ppo_v, conx_v])
+    common.print_table(
+        f"Table III (LP converged latency, Eps={eps})",
+        ["model", "cstr", "GA", "PPO2", "Con'X(g)"], out_rows)
+    print(f"GA infeasible (NAN) rows: {n_ga_nan}/{len(rows)}; "
+          f"Con'X best-or-tied: {n_conx_best}/{len(rows)}")
+    return {"rows": payload, "ga_nan": n_ga_nan,
+            "conx_best_or_tied": n_conx_best, "eps": eps}
+
+
+if __name__ == "__main__":
+    common.save_json("table3_lp", run())

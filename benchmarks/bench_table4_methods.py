@@ -1,0 +1,74 @@
+"""Table IV: optimizer comparison across platform constraints.
+
+MobileNet-V2, NVDLA-style, LP deployment.  Grid / Random / SA / GA /
+Bayesian-opt / Con'X(global) under area & power budgets from unlimited to
+IoTx.  The paper's headline: classic methods fail to find *feasible* points
+under tight constraints ("NAN"); Con'X always succeeds and dominates.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines, env as env_lib, ga as ga_lib, reinforce, \
+    search
+from repro.costmodel import workloads
+
+ROWS_FULL = [
+    ("latency", "area", "unlimited"), ("latency", "area", "cloud"),
+    ("latency", "area", "iot"), ("latency", "area", "iotx"),
+    ("latency", "power", "cloud"), ("latency", "power", "iot"),
+    ("latency", "power", "iotx"),
+    ("energy", "area", "unlimited"), ("energy", "area", "cloud"),
+    ("energy", "area", "iot"), ("energy", "area", "iotx"),
+    ("energy", "power", "cloud"), ("energy", "power", "iot"),
+    ("energy", "power", "iotx"),
+]
+ROWS_QUICK = [
+    ("latency", "area", "cloud"), ("latency", "area", "iot"),
+    ("latency", "area", "iotx"), ("latency", "power", "iot"),
+    ("energy", "area", "iot"),
+]
+
+
+def run(budget_name: str = "quick") -> dict:
+    b = common.budget(budget_name)
+    eps = b["eps"]
+    rows = ROWS_FULL if b["rows"] == "all" else ROWS_QUICK
+    wl = workloads.mobilenet_v2()
+    out_rows, payload = [], []
+    for obj, cstr, plat in rows:
+        ecfg = env_lib.EnvConfig(objective=obj, constraint=cstr,
+                                 platform=plat)
+        rec = {"objective": obj, "constraint": cstr, "platform": plat}
+        rec["grid"] = baselines.grid_search(wl, ecfg, eps=eps).best_value
+        rec["random"] = baselines.random_search(wl, ecfg, eps=eps).best_value
+        rec["sa"] = baselines.simulated_annealing(wl, ecfg,
+                                                  eps=eps).best_value
+        rec["ga"] = float(ga_lib.baseline_ga(
+            wl, ecfg, ga_lib.GAConfig(population=100,
+                                      generations=max(eps // 100, 1))
+        ).best_value)
+        rec["bayes"] = baselines.bayes_opt(wl, ecfg,
+                                           eps=min(eps, 1500)).best_value
+        res = search.confuciux_search(
+            wl, ecfg,
+            rcfg=reinforce.ReinforceConfig(epochs=eps, episodes_per_epoch=1),
+            fine_tune=False)
+        rec["conx_global"] = res.best_value
+        payload.append(rec)
+        out_rows.append([obj, f"{cstr}:{plat}", rec["grid"], rec["random"],
+                         rec["sa"], rec["ga"], rec["bayes"],
+                         rec["conx_global"]])
+    common.print_table(
+        f"Table IV (MobileNet-V2, dla, LP, Eps={eps})",
+        ["obj", "constraint", "Grid", "Random", "SA", "GA", "Bayes",
+         "Con'X(g)"],
+        out_rows)
+    # Claim checks: Con'X is feasible everywhere; baselines fail somewhere
+    # under tight budgets (full run) and never beat Con'X by >5%.
+    feas = all(r["conx_global"] < float("inf") for r in payload)
+    print(f"Con'X feasible on all {len(payload)} rows: {feas}")
+    return {"rows": payload, "conx_always_feasible": feas, "eps": eps}
+
+
+if __name__ == "__main__":
+    common.save_json("table4_methods", run())

@@ -1,0 +1,57 @@
+"""Table VI: dataflow-HW co-automation.  Con'X-dla/-eye/-shi vs Con'X-MIX.
+
+The MIX agent makes three decisions per layer (PE, Buffer, dataflow style);
+the paper reports 4-69% further improvement over the best fixed style.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import env as env_lib, reinforce, search
+from repro.costmodel import dataflows as dfl
+from repro.costmodel import workloads
+
+ROWS_FULL = [
+    ("mobilenet_v2", "iot"), ("mobilenet_v2", "iotx"),
+    ("mnasnet", "cloud"), ("mnasnet", "iot"),
+    ("resnet50", "cloud"), ("resnet50", "iot"), ("resnet50", "iotx"),
+    ("gnmt", "cloud"), ("ncf", "cloud"), ("ncf", "iot"),
+]
+ROWS_QUICK = [("mobilenet_v2", "iot"), ("mnasnet", "cloud"),
+              ("ncf", "cloud")]
+
+
+def run(budget_name: str = "quick") -> dict:
+    b = common.budget(budget_name)
+    eps = b["eps"]
+    rows = ROWS_FULL if b["rows"] == "all" else ROWS_QUICK
+    out_rows, payload = [], []
+    for model, plat in rows:
+        wl = workloads.get_workload(model)
+        rcfg = reinforce.ReinforceConfig(epochs=eps, episodes_per_epoch=4)
+        vals = {}
+        for name in dfl.DATAFLOW_NAMES:
+            ecfg = env_lib.EnvConfig(
+                platform=plat, dataflow=dfl.DATAFLOW_NAMES.index(name))
+            vals[name] = search.confuciux_search(
+                wl, ecfg, rcfg, fine_tune=False).best_value
+        mix_res = search.confuciux_search(
+            wl, env_lib.EnvConfig(platform=plat, mix=True), rcfg,
+            fine_tune=False)
+        vals["mix"] = mix_res.best_value
+        best_fixed = min(vals[n] for n in dfl.DATAFLOW_NAMES)
+        impr = 100.0 * (1 - vals["mix"] / best_fixed)
+        payload.append({"model": model, "platform": plat, **vals,
+                        "mix_improvement_pct": impr,
+                        "mix_styles": [dfl.DATAFLOW_NAMES[int(d)]
+                                       for d in mix_res.df]})
+        out_rows.append([model, plat, vals["dla"], vals["eye"], vals["shi"],
+                         vals["mix"], f"{impr:+.1f}%"])
+    common.print_table(
+        f"Table VI (dataflow-HW co-automation, Eps={eps})",
+        ["model", "cstr", "Con'X-dla", "Con'X-eye", "Con'X-shi", "Con'X-MIX",
+         "vs best fixed"], out_rows)
+    return {"rows": payload, "eps": eps}
+
+
+if __name__ == "__main__":
+    common.save_json("table6_mix", run())

@@ -1,0 +1,77 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark module exposes ``run(budget) -> dict`` where budget scales
+the sample counts ("quick" for CI-sized runs, "full" for the paper's
+Eps=5000).  Results are printed as aligned tables and written to
+``results/<bench>.json`` so EXPERIMENTS.md can cite them.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+# Sample budgets (paper: Eps = 5000).
+BUDGETS = {
+    "quick": {"eps": 600, "ga_gens": 300, "rows": "subset"},
+    "full": {"eps": 5000, "ga_gens": 2000, "rows": "all"},
+}
+
+
+def budget(name: str) -> Dict:
+    return BUDGETS[name]
+
+
+def fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == float("inf"):
+            return "NAN"          # the paper's notation for infeasible
+        if v != 0 and (abs(v) >= 1e4 or abs(v) < 1e-2):
+            return f"{v:.2e}"
+        return f"{v:.3g}"
+    return str(v)
+
+
+def print_table(title: str, headers: Sequence[str],
+                rows: Sequence[Sequence]) -> None:
+    cells = [[fmt(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    print(f"\n== {title} ==")
+    print("  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    print("  ".join("-" * w for w in widths))
+    for r in cells:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+
+
+def save_json(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_jsonable)
+    return path
+
+
+def _jsonable(o):
+    import numpy as np
+
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,32 @@
+"""Full-budget (paper Eps=5000) validation runs for the headline tables.
+
+    PYTHONPATH=src python -m benchmarks.run_full_validation
+
+Runs Table IV (optimizer comparison, all 14 rows) and Table VII
+(two-stage, all 6 rows) at the paper's sample budget and writes
+results/<name>_full.json -- the quick-budget files from benchmarks.run
+are left untouched.  Takes ~1 h on one CPU core.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import bench_table4_methods, bench_table7_twostage, common
+
+
+def main(argv=None):
+    t0 = time.time()
+    for name, mod in [("table4_methods", bench_table4_methods),
+                      ("table7_twostage", bench_table7_twostage)]:
+        print(f"\n########## {name} (budget=full) ##########", flush=True)
+        payload = mod.run("full")
+        payload["_budget"] = "full"
+        path = common.save_json(f"{name}_full", payload)
+        print(f"[{name}] -> {path}", flush=True)
+    print(f"full-budget validation finished in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

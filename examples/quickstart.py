@@ -1,0 +1,57 @@
+"""Quickstart: ConfuciuX on MobileNet-V2 under an IoT area budget.
+
+    PYTHONPATH=src python examples/quickstart.py [--epochs 1500]
+
+Runs the full two-stage pipeline (Fig. 3) -- REINFORCE global search then
+local-GA fine-tune -- on the paper's headline workload with NVDLA-style
+dataflow, then prints the per-layer (PE, Buffer) assignment and the
+improvement breakdown (the Table VII columns).
+"""
+import argparse
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import env as env_lib                      # noqa: E402
+from repro.core import ga as ga_lib                        # noqa: E402
+from repro.core import reinforce, search                   # noqa: E402
+from repro.costmodel import workloads                      # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=1500)
+    ap.add_argument("--episodes", type=int, default=4,
+                    help="vmapped episodes/epoch (1 = paper-faithful)")
+    args = ap.parse_args()
+
+    wl = workloads.mobilenet_v2()
+    ecfg = env_lib.EnvConfig(objective="latency", constraint="area",
+                             platform="iot", scenario="LP")
+    res = search.confuciux_search(
+        wl, ecfg,
+        rcfg=reinforce.ReinforceConfig(epochs=args.epochs,
+                                       episodes_per_epoch=args.episodes),
+        gcfg=ga_lib.LocalGAConfig(generations=500))
+
+    print(f"\nMobileNet-V2 / NVDLA-style / IoT area budget "
+          f"(objective: latency, {args.epochs} epochs)")
+    print(f"  first feasible value : {res.initial_valid_value:.3e} cycles")
+    s1 = 100 * (1 - res.stage1_value / res.initial_valid_value)
+    s2 = 100 * (1 - res.best_value / res.stage1_value)
+    print(f"  after RL global      : {res.stage1_value:.3e}  (-{s1:.1f}%)")
+    print(f"  after GA fine-tune   : {res.best_value:.3e}  (-{s2:.1f}%)")
+    print(f"  wall time            : {res.wall_seconds:.1f}s\n")
+
+    print("per-layer assignment (first 12 layers):")
+    print(f"  {'layer':24s} {'PE':>4s} {'Buf(kt)':>8s}")
+    for i in range(min(12, len(wl))):
+        print(f"  {wl[i].name:24s} {int(res.pe[i]):4d} {int(res.kt[i]):8d}")
+    print(f"  ... ({len(wl)} layers total)")
+    assert np.isfinite(res.best_value)
+
+
+if __name__ == "__main__":
+    main()

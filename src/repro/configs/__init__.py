@@ -1,0 +1,12 @@
+"""Architecture configs: one module per assigned architecture (+ helpers).
+
+``get(name)`` accepts both canonical ids (qwen3_32b) and the brief's ids
+(qwen3-32b).  Each module exposes CONFIG (exact published shape) and
+smoke() (reduced same-family config for CPU tests).
+"""
+from repro.configs.base import (ALIASES, ARCH_IDS, SHAPES, ArchConfig,
+                                InputShape, all_configs, canonical, get,
+                                get_shape, get_smoke)
+
+__all__ = ["ALIASES", "ARCH_IDS", "SHAPES", "ArchConfig", "InputShape",
+           "all_configs", "canonical", "get", "get_shape", "get_smoke"]

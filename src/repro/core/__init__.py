@@ -1,0 +1,22 @@
+"""ConfuciuX core: the paper's contribution as a composable JAX module.
+
+  env          -- the interactive environment (cost model + constraints)
+  policy       -- LSTM/MLP policy networks
+  reinforce    -- stage-1 REINFORCE global search
+  ga           -- stage-2 local GA fine-tuner + baseline GA
+  baselines    -- grid / random / simulated annealing / Bayesian opt
+  rl_baselines -- A2C / PPO2 actor-critic baselines
+  search       -- two-stage orchestration + LS per-layer study
+"""
+from repro.core.env import EnvConfig, make_env
+from repro.core.reinforce import ReinforceConfig, run_search
+from repro.core.search import SearchResult, confuciux_search
+
+__all__ = [
+    "EnvConfig",
+    "make_env",
+    "ReinforceConfig",
+    "run_search",
+    "SearchResult",
+    "confuciux_search",
+]

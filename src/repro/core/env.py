@@ -1,0 +1,142 @@
+"""The interactive environment (SIII-F): workload + constraints + objective.
+
+The Env wraps the analytical cost model.  Everything is a device array so a
+whole episode -- and in fact the whole multi-thousand-epoch search -- stays
+inside one XLA program (DESIGN.md S3 "Env-in-the-graph").
+
+Observation (Eq. 1): O_t = (K,C,Y,X,R,S,T, A^PE_{t-1}, A^Buf_{t-1}, t),
+every dimension normalized to [-1, 1].  The static 7-dim layer part is
+precomputed here; the dynamic 3 dims (previous actions + time) are appended
+by the rollout.  The MIX agent appends the previous dataflow choice as an
+11th dimension.
+
+Platform constraints (Table II): budget = frac * C_max, where C_max is the
+constraint consumption of the whole model under the uniform maximum action
+pair (p_12th, b_12th) -- measured exactly as the paper measures it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.costmodel import dataflows as dfl
+from repro.costmodel import maestro
+from repro.costmodel.layers import NUM_FIELDS, layers_to_array
+
+PLATFORM_FRACTIONS = {
+    "unlimited": float("inf"),
+    "cloud": 0.50,
+    "iot": 0.10,
+    "iotx": 0.05,
+}
+
+OBJECTIVES = ("latency", "energy")
+CONSTRAINTS = ("area", "power")
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    """Static (trace-time) environment configuration."""
+
+    objective: str = "latency"
+    constraint: str = "area"
+    platform: str = "iot"
+    scenario: str = "LP"
+    dataflow: int = dfl.DLA    # ignored when mix=True
+    mix: bool = False
+    levels: int = 12
+
+    def __post_init__(self):
+        assert self.objective in OBJECTIVES
+        assert self.constraint in CONSTRAINTS
+        assert self.platform in PLATFORM_FRACTIONS
+        assert self.scenario in ("LP", "LS")
+
+    @property
+    def obs_dim(self) -> int:
+        return 11 if self.mix else 10
+
+
+class EnvArrays(NamedTuple):
+    """Device-array environment state (jit-traceable)."""
+
+    layers: jnp.ndarray      # (N, NUM_FIELDS) f32
+    static_obs: jnp.ndarray  # (N, 7) normalized layer observation
+    pe_table: jnp.ndarray    # (L,) f32
+    kt_table: jnp.ndarray    # (L,) f32
+    budget: jnp.ndarray      # () f32 (inf for unlimited)
+
+    @property
+    def num_layers(self) -> int:
+        return self.layers.shape[0]
+
+
+def _normalize_obs(arr: np.ndarray) -> np.ndarray:
+    """Per-model max-normalization of (K,C,Y,X,R,S,type) into [-1, 1]."""
+    obs = arr[:, :7].astype(np.float64)
+    maxes = np.maximum(obs.max(axis=0), 1.0)
+    return (2.0 * obs / maxes - 1.0).astype(np.float32)
+
+
+def max_constraint(layers_arr, cfg: EnvConfig) -> float:
+    """C_max: whole-model consumption at the uniform max action (Table II)."""
+    N = layers_arr.shape[0]
+    pe_max = float(dfl.pe_levels(cfg.levels)[-1])
+    kt_max = float(dfl.kt_levels(cfg.levels)[-1])
+    df = cfg.dataflow if not cfg.mix else dfl.DLA
+    out = maestro.model_cost(
+        jnp.asarray(layers_arr, jnp.float32),
+        jnp.full((N,), pe_max), jnp.full((N,), kt_max), df, cfg.scenario)
+    val = out.area if cfg.constraint == "area" else out.power
+    return float(val)
+
+
+def make_env(workload, cfg: EnvConfig) -> EnvArrays:
+    """Build the Env from a workload (list of LayerSpec or (N,8) array)."""
+    if isinstance(workload, (list, tuple)):
+        arr = layers_to_array(workload)
+    else:
+        arr = np.asarray(workload)
+    assert arr.ndim == 2 and arr.shape[1] == NUM_FIELDS
+    frac = PLATFORM_FRACTIONS[cfg.platform]
+    budget = (np.float32(np.inf) if np.isinf(frac)
+              else np.float32(frac * max_constraint(arr, cfg)))
+    return EnvArrays(
+        layers=jnp.asarray(arr, jnp.float32),
+        static_obs=jnp.asarray(_normalize_obs(arr)),
+        pe_table=jnp.asarray(dfl.pe_levels(cfg.levels), jnp.float32),
+        kt_table=jnp.asarray(dfl.kt_levels(cfg.levels), jnp.float32),
+        budget=jnp.asarray(budget),
+    )
+
+
+def layer_cost(env: EnvArrays, cfg: EnvConfig, t, pe, kt, df):
+    """Per-layer (objective value, constraint consumption) at step t."""
+    out = maestro.evaluate(env.layers[t], pe, kt, df)
+    perf = out.latency if cfg.objective == "latency" else out.energy
+    cons = out.area if cfg.constraint == "area" else out.power
+    return perf, cons
+
+
+def genome_cost(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
+    """Whole-model (objective, constraint, feasible) for per-layer arrays.
+
+    pe/kt: (..., N) raw values;  df: scalar or (..., N).
+    LP: constraint = sum over layers; LS: constraint = max over layers.
+    """
+    out = maestro.evaluate(env.layers, pe, kt, df)
+    perf = out.latency if cfg.objective == "latency" else out.energy
+    cons = out.area if cfg.constraint == "area" else out.power
+    total_perf = jnp.sum(perf, axis=-1)
+    if cfg.scenario == "LP":
+        total_cons = jnp.sum(cons, axis=-1)
+    else:
+        total_cons = jnp.max(cons, axis=-1)
+    return total_perf, total_cons, total_cons <= env.budget
+
+
+def action_tables(cfg: EnvConfig) -> Sequence[np.ndarray]:
+    return dfl.pe_levels(cfg.levels), dfl.kt_levels(cfg.levels)

@@ -1,0 +1,194 @@
+"""Genetic algorithms: the stage-2 local fine-tuner (SIII-G) and the
+general-GA baseline (SIV-A3).
+
+Both operate on genomes of 2N genes -- per-layer (PE, Buf) -- plus an
+optional dataflow gene for MIX.  The baseline GA works in the coarse L-level
+space; the local fine-tuner works in the *raw* integer space around the
+stage-1 solution with the paper's conservative operators:
+
+  * local mutation   -- a gene moves at most +-step from its current value
+                        (SIII-G "for a gene representing PE=64 ... mutate to
+                        value in the range [60, 68] when the step is 4")
+  * local crossover  -- *within* one genome: swap the (PE, Buf) pairs of two
+                        layers, preserving the learnt budget split
+
+Fitness = whole-model objective, +inf when the platform constraint is
+violated.  Fully vectorized: one generation = one batched cost-model call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as env_lib
+from repro.costmodel import dataflows as dfl
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    population: int = 100
+    generations: int = 50
+    mutation_rate: float = 0.05
+    crossover_rate: float = 0.05
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalGAConfig:
+    population: int = 20
+    generations: int = 2000
+    mutation_rate: float = 0.05
+    crossover_rate: float = 0.2
+    mutation_step: int = 4       # raw-space +-step (PE); kt uses step 1
+    seed: int = 0
+
+
+class GAResult(NamedTuple):
+    best_value: jnp.ndarray      # () objective; inf if nothing feasible
+    best_pe: jnp.ndarray         # (N,) raw PE counts
+    best_kt: jnp.ndarray         # (N,) raw tile counts
+    best_df: jnp.ndarray         # (N,) dataflow ids
+    history: jnp.ndarray         # (generations,) best-so-far trace
+    evals: int
+
+
+def _fitness(env, ecfg, pe, kt, df):
+    perf, cons, feas = env_lib.genome_cost(env, ecfg, pe, kt, df)
+    return jnp.where(feas, perf, jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Baseline GA (coarse level space).
+# ---------------------------------------------------------------------------
+def baseline_ga(workload, ecfg: env_lib.EnvConfig,
+                cfg: GAConfig = GAConfig()) -> GAResult:
+    env = env_lib.make_env(workload, ecfg)
+    N = env.num_layers
+    P = cfg.population
+    L = ecfg.levels
+    n_df = 3 if ecfg.mix else 1
+    key = jax.random.PRNGKey(cfg.seed)
+
+    def decode(genome):
+        pe = env.pe_table[genome[..., 0]]
+        kt = env.kt_table[genome[..., 1]]
+        df = (genome[..., 2] if ecfg.mix
+              else jnp.asarray(ecfg.dataflow, jnp.int32))
+        return pe, kt, df
+
+    def gen_step(carry, _):
+        pop, best_val, best_genome, key = carry
+        pe, kt, df = decode(pop)
+        fit = _fitness(env, ecfg, pe, kt, df)          # (P,)
+        order = jnp.argsort(fit)
+        pop = pop[order]
+        fit = fit[order]
+        better = fit[0] < best_val
+        best_val = jnp.where(better, fit[0], best_val)
+        best_genome = jnp.where(better, pop[0], best_genome)
+        # Elitist half survives; children from random parent pairs.
+        half = P // 2
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        pa = jax.random.randint(k1, (P - half,), 0, half)
+        pb = jax.random.randint(k2, (P - half,), 0, half)
+        cx_mask = (jax.random.uniform(k3, (P - half, N, pop.shape[-1]))
+                   < cfg.crossover_rate)
+        children = jnp.where(cx_mask, pop[pb], pop[pa])
+        mut_mask = (jax.random.uniform(k4, children.shape)
+                    < cfg.mutation_rate)
+        key, k5 = jax.random.split(key)
+        rand = jax.random.randint(k5, children.shape, 0, L)
+        if ecfg.mix:
+            rand = rand.at[..., 2].set(
+                jax.random.randint(jax.random.fold_in(k5, 1),
+                                   children.shape[:-1], 0, n_df))
+        children = jnp.where(mut_mask, rand, children)
+        pop = jnp.concatenate([pop[:half], children], axis=0)
+        return (pop, best_val, best_genome, key), best_val
+
+    genes = 3 if ecfg.mix else 2
+    key, k0 = jax.random.split(key)
+    pop = jax.random.randint(k0, (P, N, genes), 0, L)
+    if ecfg.mix:
+        pop = pop.at[..., 2].set(
+            jax.random.randint(jax.random.fold_in(k0, 7), (P, N), 0, 3))
+    init = (pop, jnp.inf, jnp.zeros((N, genes), jnp.int32), key)
+    (pop, best_val, best_genome, _), hist = jax.lax.scan(
+        gen_step, init, None, length=cfg.generations)
+    pe, kt, df = decode(best_genome)
+    df = jnp.broadcast_to(df, (N,))
+    return GAResult(best_val, pe, kt, df, hist,
+                    cfg.population * cfg.generations)
+
+
+# ---------------------------------------------------------------------------
+# Stage-2 local GA (fine-grained raw space, seeded by the RL solution).
+# ---------------------------------------------------------------------------
+def local_ga(workload, ecfg: env_lib.EnvConfig,
+             init_pe, init_kt, init_df,
+             cfg: LocalGAConfig = LocalGAConfig()) -> GAResult:
+    env = env_lib.make_env(workload, ecfg)
+    N = env.num_layers
+    P = cfg.population
+    key = jax.random.PRNGKey(cfg.seed)
+
+    init_genome = jnp.stack(
+        [jnp.asarray(init_pe, jnp.int32), jnp.asarray(init_kt, jnp.int32)],
+        axis=-1)                                         # (N, 2)
+    df = jnp.asarray(init_df, jnp.int32)                 # (N,) fixed in stage 2
+
+    def mutate(genome, key):
+        k1, k2 = jax.random.split(key)
+        mask = jax.random.uniform(k1, genome.shape) < cfg.mutation_rate
+        step = jnp.stack([
+            jax.random.randint(k2, genome.shape[:-1],
+                               -cfg.mutation_step, cfg.mutation_step + 1),
+            jax.random.randint(jax.random.fold_in(k2, 1), genome.shape[:-1],
+                               -1, 2)], axis=-1)
+        out = jnp.where(mask, genome + step, genome)
+        lo = jnp.array([dfl.PE_MIN, dfl.KT_MIN])
+        hi = jnp.array([dfl.PE_MAX, dfl.KT_MAX])
+        return jnp.clip(out, lo, hi)
+
+    def self_crossover(genome, key):
+        """Swap the (PE, Buf) pairs of two random layers (SIII-G)."""
+        k1, k2, k3 = jax.random.split(key, 3)
+        i = jax.random.randint(k1, (), 0, N)
+        j = jax.random.randint(k2, (), 0, N)
+        do = jax.random.uniform(k3) < cfg.crossover_rate
+        gi, gj = genome[i], genome[j]
+        swapped = genome.at[i].set(gj).at[j].set(gi)
+        return jnp.where(do, swapped, genome)
+
+    def gen_step(carry, _):
+        pop, best_val, best_genome, key = carry
+        pe = pop[..., 0].astype(jnp.float32)
+        kt = pop[..., 1].astype(jnp.float32)
+        fit = _fitness(env, ecfg, pe, kt, df)
+        order = jnp.argsort(fit)
+        pop, fit = pop[order], fit[order]
+        better = fit[0] < best_val
+        best_val = jnp.where(better, fit[0], best_val)
+        best_genome = jnp.where(better, pop[0], best_genome)
+        half = P // 2
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        parents = pop[jax.random.randint(k1, (P - half,), 0, half)]
+        children = jax.vmap(self_crossover)(
+            parents, jax.random.split(k2, P - half))
+        children = jax.vmap(mutate)(children, jax.random.split(k3, P - half))
+        pop = jnp.concatenate([pop[:half], children], axis=0)
+        return (pop, best_val, best_genome, key), best_val
+
+    pop = jnp.broadcast_to(init_genome, (P, N, 2)).astype(jnp.int32)
+    init = (pop, jnp.inf, init_genome, key)
+    run = functools.partial(jax.lax.scan, gen_step, length=cfg.generations)
+    (_, best_val, best_genome, _), hist = jax.jit(
+        lambda init: run(init, None))(init)
+    return GAResult(best_val,
+                    best_genome[..., 0].astype(jnp.float32),
+                    best_genome[..., 1].astype(jnp.float32),
+                    df, hist, cfg.population * cfg.generations)

@@ -1,0 +1,276 @@
+"""Actor-critic RL baselines: A2C [47] and PPO2 [66] (discrete variants).
+
+The paper compares REINFORCE against A2C, ACKTR, PPO2, DDPG, SAC and TD3 and
+finds the discrete on-policy methods (A2C/PPO2) the strongest baselines
+(Table V; the continuous off-policy ones cost more time/memory and do worse).
+We implement A2C and PPO2 -- the two baselines the paper's tables actually
+feature -- on the *same* environment, observation, reward shaping and LSTM
+trunk as the REINFORCE agent, plus a linear value head (the critic).
+
+The standalone critic-fit experiment (Fig. 6: a critic cannot regress the
+discrete/irregular HW-performance landscape) lives in
+benchmarks/bench_fig6_critic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as env_lib
+from repro.core import policy as policy_lib
+from repro.core import reinforce
+from repro.costmodel import maestro
+from repro.training import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class ACConfig:
+    algo: str = "a2c"            # "a2c" | "ppo2"
+    epochs: int = 5000
+    episodes_per_epoch: int = 4
+    lr: float = 1e-3
+    discount: float = 0.9
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2        # PPO clip
+    ppo_updates: int = 4         # PPO inner epochs
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    seed: int = 0
+
+
+class ACRollout(NamedTuple):
+    obs: jnp.ndarray       # (N, obs_dim)
+    actions: jnp.ndarray   # (N, 3)
+    rewards: jnp.ndarray   # (N,)
+    mask: jnp.ndarray      # (N,)
+    logps: jnp.ndarray     # (N,)
+    values: jnp.ndarray    # (N,)
+    perf: jnp.ndarray      # (N,)
+    feasible: jnp.ndarray
+    model_value: jnp.ndarray
+    pmin: jnp.ndarray
+
+
+def init_ac_params(key, pcfg: policy_lib.PolicyConfig):
+    k1, k2 = jax.random.split(key)
+    params = policy_lib.init_params(k1, pcfg)
+    params["head_v"] = {
+        "w": jax.random.normal(k2, (pcfg.hidden, 1)) * 0.01,
+        "b": jnp.zeros((1,)),
+    }
+    return params
+
+
+def _value(params, feat):
+    return (feat @ params["head_v"]["w"] + params["head_v"]["b"])[..., 0]
+
+
+def make_ac_rollout(ecfg: env_lib.EnvConfig, pcfg: policy_lib.PolicyConfig,
+                    env: env_lib.EnvArrays):
+    """Rollout that also records observations and value estimates."""
+    N = env.num_layers
+    t_norm = 2.0 * jnp.arange(N, dtype=jnp.float32) / max(N - 1, 1) - 1.0
+    Lm1 = max(pcfg.levels - 1, 1)
+
+    def rollout(params, pmin, key) -> ACRollout:
+        def step_fn(carry, xs):
+            (pstate, prev_pe, prev_kt, prev_df, budget_left, alive, acc_r,
+             pmin_run, key) = carry
+            sobs, layer_t, tn = xs
+            dyn = [prev_pe, prev_kt] + ([prev_df] if ecfg.mix else []) + [tn]
+            obs = jnp.concatenate([sobs, jnp.stack(dyn)])
+            logits, pstate2 = policy_lib.step(params, pcfg, obs, pstate)
+            v = _value(params, pstate2.h if pcfg.kind == "rnn" else obs)
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            a_pe, lp_pe, _ = policy_lib.sample_action(k1, logits[0])
+            a_kt, lp_kt, _ = policy_lib.sample_action(k2, logits[1])
+            if ecfg.mix:
+                a_df, lp_df, _ = policy_lib.sample_action(k3, logits[2])
+            else:
+                a_df = jnp.asarray(ecfg.dataflow, jnp.int32)
+                lp_df = jnp.zeros(())
+            pe = env.pe_table[a_pe]
+            kt = env.kt_table[a_kt]
+            out = maestro.evaluate(layer_t, pe, kt, a_df)
+            perf_pos = (out.latency if ecfg.objective == "latency"
+                        else out.energy)
+            cons = out.area if ecfg.constraint == "area" else out.power
+            P_t = -perf_pos
+            if ecfg.scenario == "LP":
+                budget_left2 = budget_left - cons
+                viol = alive & (budget_left2 < 0)
+            else:
+                budget_left2 = budget_left
+                viol = alive & (cons > env.budget)
+            pmin2 = jnp.where(alive, jnp.minimum(pmin_run, P_t), pmin_run)
+            r = jnp.where(viol, -acc_r, P_t - pmin2) * alive
+            acc_r2 = acc_r + jnp.where(alive & ~viol, r, 0.0)
+            mask = alive.astype(jnp.float32)
+            alive2 = alive & ~viol
+            carry2 = (pstate2,
+                      2.0 * a_pe / Lm1 - 1.0, 2.0 * a_kt / Lm1 - 1.0,
+                      a_df.astype(jnp.float32) - 1.0,
+                      budget_left2, alive2, acc_r2, pmin2, key)
+            outs = (obs, jnp.stack([a_pe, a_kt, a_df]).astype(jnp.int32),
+                    r, mask, lp_pe + lp_kt + lp_df, v, perf_pos)
+            return carry2, outs
+
+        init = (policy_lib.init_state(pcfg),
+                jnp.float32(-1.0), jnp.float32(-1.0), jnp.float32(-1.0),
+                env.budget, jnp.asarray(True), jnp.float32(0.0), pmin, key)
+        carry, outs = jax.lax.scan(
+            step_fn, init, (env.static_obs, env.layers, t_norm))
+        alive_end, pmin_out = carry[5], carry[7]
+        obs, actions, r, mask, logps, values, perf = outs
+        return ACRollout(obs, actions, r, mask, logps, values, perf,
+                         alive_end, jnp.sum(perf * mask), pmin_out)
+
+    return rollout
+
+
+def eval_sequence(params, pcfg: policy_lib.PolicyConfig, obs_seq, actions):
+    """Re-run the policy over stored observations: logp/value/entropy per t."""
+    def step_fn(pstate, xs):
+        obs, act = xs
+        logits, pstate2 = policy_lib.step(params, pcfg, obs, pstate)
+        v = _value(params, pstate2.h if pcfg.kind == "rnn" else obs)
+        lp = jnp.zeros(())
+        ent = jnp.zeros(())
+        for idx, lg in enumerate(logits):
+            logp_all = jax.nn.log_softmax(lg)
+            lp = lp + logp_all[act[idx]]
+            p = jnp.exp(logp_all)
+            ent = ent - jnp.sum(p * logp_all)
+        return pstate2, (lp, v, ent)
+
+    pstate = policy_lib.init_state(pcfg)
+    _, (lps, vs, ents) = jax.lax.scan(step_fn, pstate, (obs_seq, actions))
+    return lps, vs, ents
+
+
+def _gae(rewards, values, mask, gamma, lam):
+    """Generalized advantage estimation over a masked episode."""
+    def f(carry, xs):
+        adv_next, v_next = carry
+        r, v, m = xs
+        delta = r + gamma * v_next * m - v
+        adv = delta + gamma * lam * adv_next * m
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        f, (jnp.float32(0.0), jnp.float32(0.0)),
+        (rewards[::-1], values[::-1], mask[::-1]))
+    return advs[::-1]
+
+
+def run_ac_search(workload, ecfg: env_lib.EnvConfig,
+                  acfg: ACConfig = ACConfig(),
+                  pcfg: policy_lib.PolicyConfig | None = None,
+                  chunk: int = 500):
+    """A2C / PPO2 search with the same interface as reinforce.run_search."""
+    env = env_lib.make_env(workload, ecfg)
+    if pcfg is None:
+        pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, mix=ecfg.mix,
+                                       levels=ecfg.levels)
+    opt = optim.Adam(lr=acfg.lr, clip_norm=1.0)
+    key = jax.random.PRNGKey(acfg.seed)
+    key, pkey = jax.random.split(key)
+    params = init_ac_params(pkey, pcfg)
+    N = env.num_layers
+    state = reinforce.SearchState(
+        params=params, opt_state=opt.init(params),
+        pmin=jnp.asarray(jnp.inf, jnp.float32),
+        best_value=jnp.asarray(jnp.inf, jnp.float32),
+        best_pe_lvl=jnp.zeros((N,), jnp.int32),
+        best_kt_lvl=jnp.zeros((N,), jnp.int32),
+        best_df=jnp.full((N,), ecfg.dataflow, jnp.int32),
+        key=key, epoch=jnp.zeros((), jnp.int32))
+    rollout = make_ac_rollout(ecfg, pcfg, env)
+    E = acfg.episodes_per_epoch
+
+    def a2c_loss(params, rolls, adv, ret):
+        lps, vs, ents = jax.vmap(
+            lambda o, a: eval_sequence(params, pcfg, o, a))(
+                rolls.obs, rolls.actions)
+        pl = -jnp.mean((lps * jax.lax.stop_gradient(adv)
+                        * rolls.mask).sum(1))
+        vl = jnp.mean((jnp.square(vs - ret) * rolls.mask).sum(1))
+        el = jnp.mean((ents * rolls.mask).sum(1))
+        return pl + acfg.value_coef * vl - acfg.entropy_coef * el
+
+    def ppo_loss(params, rolls, adv, ret, logp_old):
+        lps, vs, ents = jax.vmap(
+            lambda o, a: eval_sequence(params, pcfg, o, a))(
+                rolls.obs, rolls.actions)
+        ratio = jnp.exp(lps - logp_old)
+        adv_sg = jax.lax.stop_gradient(adv)
+        un = ratio * adv_sg
+        cl = jnp.clip(ratio, 1 - acfg.clip_eps, 1 + acfg.clip_eps) * adv_sg
+        pl = -jnp.mean((jnp.minimum(un, cl) * rolls.mask).sum(1))
+        vl = jnp.mean((jnp.square(vs - ret) * rolls.mask).sum(1))
+        el = jnp.mean((ents * rolls.mask).sum(1))
+        return pl + acfg.value_coef * vl - acfg.entropy_coef * el
+
+    def epoch_fn(state, _):
+        key, sub = jax.random.split(state.key)
+        keys = jax.random.split(sub, E)
+        rolls = jax.vmap(lambda k: rollout(state.params, state.pmin, k))(keys)
+        adv = jax.vmap(lambda r, v, m: _gae(r, v, m, acfg.discount,
+                                            acfg.gae_lambda))(
+            rolls.rewards * rolls.mask, rolls.values * rolls.mask,
+            rolls.mask)
+        ret = adv + rolls.values * rolls.mask
+        # Normalize advantages over valid steps.
+        nv = jnp.maximum(rolls.mask.sum(), 1.0)
+        am = (adv * rolls.mask).sum() / nv
+        astd = jnp.sqrt((jnp.square(adv - am) * rolls.mask).sum() / nv)
+        adv = (adv - am) / (astd + 1e-8) * rolls.mask
+
+        params, opt_state = state.params, state.opt_state
+        if acfg.algo == "a2c":
+            grads = jax.grad(a2c_loss)(params, rolls, adv, ret)
+            params, opt_state = opt.update(grads, opt_state, params)
+        else:
+            logp_old = jax.lax.stop_gradient(rolls.logps)
+            for _ in range(acfg.ppo_updates):
+                grads = jax.grad(ppo_loss)(params, rolls, adv, ret, logp_old)
+                params, opt_state = opt.update(grads, opt_state, params)
+
+        values = jnp.where(rolls.feasible, rolls.model_value, jnp.inf)
+        i = jnp.argmin(values)
+        better = values[i] < state.best_value
+        pick = lambda new, old: jnp.where(better, new, old)
+        new_state = reinforce.SearchState(
+            params=params, opt_state=opt_state,
+            pmin=jnp.min(rolls.pmin),
+            best_value=jnp.where(better, values[i], state.best_value),
+            best_pe_lvl=pick(rolls.actions[i, :, 0], state.best_pe_lvl),
+            best_kt_lvl=pick(rolls.actions[i, :, 1], state.best_kt_lvl),
+            best_df=pick(rolls.actions[i, :, 2], state.best_df),
+            key=key, epoch=state.epoch + 1)
+        metrics = {
+            "best_value": new_state.best_value,
+            "mean_value": jnp.mean(rolls.model_value),
+            "feasible_frac": jnp.mean(rolls.feasible.astype(jnp.float32)),
+        }
+        return new_state, metrics
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def run_chunk(state, n):
+        return jax.lax.scan(epoch_fn, state, None, length=n)
+
+    history = []
+    done = 0
+    while done < acfg.epochs:
+        n = min(chunk, acfg.epochs - done)
+        state, metrics = run_chunk(state, n)
+        history.append(jax.tree.map(jax.device_get, metrics))
+        done += n
+    import numpy as np
+
+    hist = {k: np.concatenate([h[k] for h in history]) for k in history[0]}
+    return state, hist

@@ -1,0 +1,83 @@
+"""Dataflow styles and the coarse (L-level) action tables.
+
+Three dataflow styles from the paper (SII, SIV-A2):
+
+  * NVDLA-style (``dla``)     : weight-stationary; parallelizes K (output
+                                channels) and C (input channels); each PE
+                                holds ``kt`` filters.
+  * Eyeriss-style (``eye``)   : row-stationary; parallelizes Y (output rows)
+                                and R (filter rows); each PE runs 1-D row
+                                convolutions for ``kt`` filters.
+  * ShiDianNao-style (``shi``): output-stationary; parallelizes Y and X
+                                (output pixels); each PE accumulates ``kt``
+                                output channels of its pixel.
+
+The coarse action space is the paper's Table I: L=12 level values for PEs and
+for the per-PE tile count ``kt`` (which determines the L1 buffer size via the
+dataflow's buffer formula -- e.g. NVDLA with 3x3 filters gives
+9*kt + 9 + kt = 19,29,...,129 bytes, exactly Table I's buffer row).
+
+Table IX ablates L in {10, 12, 14}; ``pe_levels(L)`` / ``kt_levels(L)``
+provide those tables.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DLA = 0
+EYE = 1
+SHI = 2
+NUM_DATAFLOWS = 3
+DATAFLOW_NAMES = ("dla", "eye", "shi")
+
+_PE_TABLES = {
+    10: [1, 2, 4, 8, 16, 24, 32, 48, 64, 128],
+    # Paper Table I.
+    12: [1, 2, 4, 8, 12, 16, 24, 32, 48, 64, 96, 128],
+    14: [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128],
+}
+
+
+def pe_levels(L: int = 12) -> np.ndarray:
+    """PE count at each of the L coarse action levels."""
+    if L not in _PE_TABLES:
+        raise ValueError(f"unsupported action-level count L={L}")
+    return np.asarray(_PE_TABLES[L], dtype=np.int32)
+
+
+def kt_levels(L: int = 12) -> np.ndarray:
+    """Per-PE tile count (filters resident per PE) at each level: 1..L."""
+    if L not in _PE_TABLES:
+        raise ValueError(f"unsupported action-level count L={L}")
+    return np.arange(1, L + 1, dtype=np.int32)
+
+
+PE_LEVELS = pe_levels(12)
+KT_LEVELS = kt_levels(12)
+
+# Fine-grained (second-stage GA) bounds: raw integers, SIII-G.
+PE_MIN, PE_MAX = 1, 160
+KT_MIN, KT_MAX = 1, 16
+
+
+def l1_bytes_formula(dataflow, kt, R, S):
+    """L1 buffer bytes per PE (elements, 1 B each) for a dataflow style.
+
+    dla: kt filters (kt*R*S) + one input patch (R*S) + kt partial outputs
+         -> kt*R*S + R*S + kt     (Table I for R=S=3: 19..129)
+    eye: kt filter rows (kt*S)   + one input row window (S) + kt psum rows
+         -> kt*S + S + kt
+    shi: one filter (R*S) + kt psums + kt-neighbourhood of inputs
+         -> R*S + 2*kt
+
+    ``dataflow`` may be a scalar or an array (broadcast, branch-free) so the
+    MIX co-automation agent can treat it as a third per-layer action.
+    """
+    import jax.numpy as jnp  # local import keeps module importable w/o jax
+
+    rs = R * S
+    dla_b = kt * rs + rs + kt
+    eye_b = kt * S + S + kt
+    shi_b = rs + 2 * kt
+    df = jnp.asarray(dataflow)
+    return jnp.where(df == DLA, dla_b, jnp.where(df == EYE, eye_b, shi_b))

@@ -1,0 +1,319 @@
+"""MAESTRO-style analytical cost model, re-derived as branch-free JAX.
+
+The paper uses MAESTRO [38] as the RL environment: given a layer descriptor,
+a dataflow style and a design point (#PEs ``pe``, per-PE tile count ``kt``
+which sets the L1 buffer), it returns latency / energy / area / power.  We
+re-derive an analytical model with the same interface and the same
+*qualitative structure* that the paper's results depend on (Fig. 4/5):
+
+  * ceil-effect plateaus: once PEs exceed the available parallel dims or the
+    buffer exceeds the per-PE working set, latency flattens
+    (over-provisioning flats in Fig. 5);
+  * DWCONV under NVDLA-style gains nothing from more buffer (no channel
+    reduction to amortize -- the paper's Layer-23 observation);
+  * energy has buffer sweet-spots: bigger L1 raises leakage+access cost but
+    cuts execution time; more PEs raise power but can cut energy;
+  * latency is *not* monotone in PEs: L2/DRAM bandwidth terms and psum
+    collection traffic can grow with the parallel width.
+
+Model structure (per layer, per design point)
+---------------------------------------------
+
+Effective dims:  Y' = Y-R+1, X' = X-S+1;  for DWCONV the reduction dim
+collapses (C_red = 1) and the independent output dim is the group count
+(K_out = C).  GEMM (M,N,Kg) arrives pre-mapped as K=N, C=Kg, Y=M, X=1 (see
+``layers.py``).
+
+Each dataflow parallelizes two dims over a (p1, p2) factorization of ``pe``
+and tiles output channels by ``kt`` per PE:
+
+                 parallel dims     inner work / PE / step     temporal steps
+  dla (NVDLA)    (ceil(K/kt), C)   kt_eff * R*S*Y'*X'         t1 * t2
+  eye (Eyeriss)  (Y', R)           kt_eff * S*X'              t1 * t2 * C * Ku
+  shi (ShiDianNao)(Y', X')         kt_eff * R*S               t1 * t2 * C * Ku
+
+with Ku = ceil(K_out/kt), t_i = ceil(dim_i/p_i) and
+kt_eff = ceil(K_out / (Ku_parallel_coverage)) <= kt.  Once kt >= K_out the
+latency is exactly flat (the Fig. 5 over-provisioning plateau: a bigger L1
+only costs area/power/leakage).  BELOW that, latency is genuinely
+non-monotone in kt -- the tile size is the action and quantization
+(ceil-of-coverage) effects are real; the paper's own Fig. 5 shows the same
+(two disjoint optimum regions in Layer-34).  1 MAC / PE / cycle.
+
+Traffic (elements; 1 element = 1 byte, int8-style accounting as in Fig. 4's
+byte-valued buffers):
+
+  dla: weights fetched once (weight-stationary); activations multicast per
+       temporal K-iteration (A * t1); outputs collected with psum width p2.
+  eye: weights refetched per temporal row-block (W * t1); activation rows
+       refetched per filter-group with halo duplication; psum width p2.
+  shi: weights streamed per output tile (W * t1 * t2); activations shared by
+       neighbour shifting (halo only); outputs written once.
+
+Latency  = max(compute, L2 traffic / bw_L2(pe), DRAM traffic / bw_DRAM)
+           + fill;   bw_L2 grows sublinearly with pe (port contention), which
+           is what makes "more PEs" non-free.
+Energy   = MAC + L1 + L2 + DRAM access energy + leakage(pe,L1)*latency.
+Area/Power = linear models over PEs, L1 bytes, L2 bytes (=2*pe*L1: the
+           double-buffered next tile, exactly how the paper sizes L2), NoC.
+
+Absolute numbers are NOT calibrated against the MAESTRO binary (DESIGN.md S5)
+-- the paper's claims we reproduce are *relative* search-quality /
+sample-efficiency comparisons, which depend on the landscape structure, not
+on absolute cycle counts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.costmodel.dataflows import DLA, EYE, SHI, l1_bytes_formula
+from repro.costmodel.layers import (
+    F_C,
+    F_K,
+    F_R,
+    F_REPEAT,
+    F_S,
+    F_TYPE,
+    F_X,
+    F_Y,
+    DWCONV,
+)
+
+# ---------------------------------------------------------------------------
+# Hardware constants (45nm-era, order-of-magnitude; units documented).
+# ---------------------------------------------------------------------------
+E_MAC = 1.0          # pJ / MAC
+E_L1 = 1.0           # pJ / L1 access (element)
+E_L2 = 6.0           # pJ / L2 access (element)
+E_DRAM = 200.0       # pJ / DRAM access (element)
+L1_ACC_PER_MAC = 3.0  # weight + act read + psum rmw
+
+P_MAC_MW = 1.0       # mW / PE (dynamic, peak)
+P_L1_MW_B = 0.005    # mW / L1 byte
+P_L2_MW_B = 0.002    # mW / L2 byte
+P_NOC_MW_PE = 0.1    # mW / PE of NoC
+
+LEAK_PE_MW = 0.05    # mW leakage / PE
+LEAK_L1_MW_B = 0.001  # mW leakage / L1 byte
+
+A_MAC_UM2 = 2000.0   # um^2 / PE (MAC + control)
+A_L1_UM2_B = 50.0    # um^2 / L1 byte
+A_L2_UM2_B = 25.0    # um^2 / L2 byte
+A_NOC_UM2_PE = 300.0  # um^2 / PE of NoC
+
+DRAM_BW = 16.0       # elements / cycle
+L2_BW_BASE = 8.0     # elements / cycle
+L2_BW_SQRT = 8.0     # + L2_BW_SQRT * sqrt(pe)
+FILL_CYCLES = 20.0   # pipeline fill
+
+
+class CostOut(NamedTuple):
+    """Per-layer (or aggregated) cost estimates."""
+
+    latency: jnp.ndarray   # cycles
+    energy: jnp.ndarray    # nJ
+    area: jnp.ndarray      # um^2
+    power: jnp.ndarray     # mW (peak)
+    l1_bytes: jnp.ndarray  # per-PE L1 buffer
+    l2_bytes: jnp.ndarray  # shared L2
+    macs: jnp.ndarray      # true MACs of the layer
+    util: jnp.ndarray      # MACs / (latency * pe)
+
+
+def _ceil_div(a, b):
+    return jnp.ceil(a / jnp.maximum(b, 1.0))
+
+
+def _factorize(pe, d1, d2):
+    """Split ``pe`` PEs over two parallel dims (d1 outer): p1*p2 <= pe."""
+    p1 = jnp.clip(pe, 1.0, jnp.maximum(d1, 1.0))
+    p2 = jnp.clip(jnp.floor(pe / p1), 1.0, jnp.maximum(d2, 1.0))
+    return p1, p2
+
+
+def _dataflow_terms(df_is, is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
+                    W_u, A_u, O_u):
+    """compute cycles + (W, A, O) L2 traffic for one dataflow style.
+
+    ``df_is`` selects the style branch-free via weights in {0,1}.
+    Returns (compute_cycles, l2_traffic) for the *selected* style.
+
+    DWCONV activations: output channel k reads ONLY input channel k, so
+    temporal K-iterations touch *disjoint* activation slices -- the total
+    activation traffic is A_u once, not A_u x #passes.  (Regular conv: every
+    output channel reduces over all C input channels, so each temporal K
+    block re-reads the full A_u.)  This is what makes DWCONV indifferent to
+    the tile size under NVDLA-style -- the paper's Layer-23 observation.
+    """
+    is_dla, is_eye, is_shi = df_is
+    Ku = _ceil_div(K_out, kt)
+
+    # ---- dla: parallel (Ku, C_red) --------------------------------------
+    p1d, p2d = _factorize(pe, Ku, C_red)
+    t1d = _ceil_div(Ku, p1d)
+    t2d = _ceil_div(C_red, p2d)
+    kt_eff_d = jnp.minimum(kt, _ceil_div(K_out, p1d * t1d))
+    comp_dla = t1d * t2d * kt_eff_d * R * S * Yp * Xp
+    a_passes_dla = jnp.where(is_dw > 0, 1.0, t1d)   # disjoint dw channels
+    l2_dla = (W_u                      # weight-stationary: once
+              + A_u * a_passes_dla     # activation multicast / K-iteration
+              + O_u * p2d)             # psum collection width
+
+    # ---- eye: parallel (Y', R); temporal over C and Ku -------------------
+    p1e, p2e = _factorize(pe, Yp, R)
+    t1e = _ceil_div(Yp, p1e)
+    t2e = _ceil_div(R, p2e)
+    kt_eff_e = jnp.minimum(kt, K_out)
+    comp_eye = t1e * t2e * C_red * Ku * kt_eff_e * S * Xp
+    halo_e = (p1e + R - 1.0) / jnp.maximum(p1e, 1.0)
+    a_passes_eye = jnp.where(is_dw > 0, 1.0, Ku)    # disjoint dw channels
+    l2_eye = (W_u * t1e                # rows re-staged per temporal block
+              + A_u * a_passes_eye * halo_e  # per filter-group + row halo
+              + O_u * p2e)
+
+    # ---- shi: parallel (Y', X'); temporal over C and Ku ------------------
+    p1s, p2s = _factorize(pe, Yp, Xp)
+    t1s = _ceil_div(Yp, p1s)
+    t2s = _ceil_div(Xp, p2s)
+    kt_eff_s = jnp.minimum(kt, K_out)
+    comp_shi = t1s * t2s * C_red * Ku * kt_eff_s * R * S
+    halo_s = ((p1s + R - 1.0) * (p2s + S - 1.0)) / jnp.maximum(p1s * p2s, 1.0)
+    l2_shi = (W_u * t1s * t2s          # weights streamed per output tile
+              + A_u * halo_s           # neighbour-shift reuse, halo only
+              + O_u)
+
+    comp = is_dla * comp_dla + is_eye * comp_eye + is_shi * comp_shi
+    l2 = is_dla * l2_dla + is_eye * l2_eye + is_shi * l2_shi
+    # Outer passes over the weight / activation tensors (DRAM refetch when
+    # the L2 cannot capture the reuse): dla re-touches activations per
+    # temporal K-iteration; eye re-touches weights per row-block and
+    # activations per filter-group; shi re-streams weights per output tile.
+    passes_w = is_dla * 1.0 + is_eye * t1e + is_shi * (t1s * t2s)
+    passes_a = is_dla * a_passes_dla + is_eye * a_passes_eye + is_shi * 1.0
+    return comp, l2, passes_w, passes_a
+
+
+def core_cost(K, C, Y, X, R, S, ltype, repeat, pe, kt, df):
+    """The model core on unpacked float32 field arrays (broadcastable).
+
+    Shared verbatim between the pure-jnp oracle (:func:`evaluate`, which is
+    ``kernels/ref.py``'s ground truth) and the Pallas TPU kernel
+    (``kernels/costmodel_eval.py``) -- both lower exactly these ops.
+    """
+    pe = jnp.maximum(pe, 1.0)
+    kt = jnp.maximum(kt, 1.0)
+    is_dla = (df == DLA).astype(jnp.float32)
+    is_eye = (df == EYE).astype(jnp.float32)
+    is_shi = (df == SHI).astype(jnp.float32)
+
+    Yp = jnp.maximum(Y - R + 1.0, 1.0)
+    Xp = jnp.maximum(X - S + 1.0, 1.0)
+    is_dw = (ltype == DWCONV).astype(jnp.float32)
+    C_red = jnp.where(is_dw > 0, 1.0, C)     # reduction channels
+    K_out = jnp.where(is_dw > 0, C, K)       # independent output dims
+
+    macs = K_out * C_red * Yp * Xp * R * S
+    W_u = K_out * C_red * R * S              # unique weights
+    A_u = C * Y * X                          # unique activations
+    O_u = K_out * Yp * Xp                    # unique outputs
+
+    comp, l2_traffic, passes_w, passes_a = _dataflow_terms(
+        (is_dla, is_eye, is_shi), is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
+        W_u, A_u, O_u)
+
+    l1_bytes = l1_bytes_formula(df, kt, R, S)
+    l2_bytes = 2.0 * pe * l1_bytes
+
+    # DRAM refetch: an outer pass re-reads its tensor from DRAM only for the
+    # fraction that spilled out of L2 (spill -> refetch ~ #passes; tensor
+    # resident -> single streaming read).  This is what makes small-buffer
+    # designs energy-catastrophic (Fig. 4's 2-orders-of-magnitude spread).
+    spill_w = jnp.clip(1.0 - l2_bytes / jnp.maximum(W_u, 1.0), 0.0, 1.0)
+    spill_a = jnp.clip(1.0 - l2_bytes / jnp.maximum(A_u, 1.0), 0.0, 1.0)
+    dram_traffic = (W_u * (1.0 + (passes_w - 1.0) * spill_w)
+                    + A_u * (1.0 + (passes_a - 1.0) * spill_a)
+                    + O_u)
+    l2_bw = L2_BW_BASE + L2_BW_SQRT * jnp.sqrt(pe)
+    lat = (jnp.maximum(jnp.maximum(comp, l2_traffic / l2_bw),
+                       dram_traffic / DRAM_BW)
+           + jnp.sqrt(pe) + FILL_CYCLES)
+
+    leak_mw = LEAK_PE_MW * pe + LEAK_L1_MW_B * l1_bytes * pe
+    energy_pj = (E_MAC * macs
+                 + E_L1 * (L1_ACC_PER_MAC * macs + l2_traffic)
+                 + E_L2 * l2_traffic
+                 + E_DRAM * dram_traffic
+                 + leak_mw * lat)            # 1 mW * 1 cycle @1GHz = 1 pJ
+
+    area = (A_MAC_UM2 * pe + A_L1_UM2_B * l1_bytes * pe
+            + A_L2_UM2_B * l2_bytes + A_NOC_UM2_PE * pe)
+    power = (P_MAC_MW * pe + P_L1_MW_B * l1_bytes * pe
+             + P_L2_MW_B * l2_bytes + P_NOC_MW_PE * pe)
+
+    return CostOut(
+        latency=lat * repeat,
+        energy=(energy_pj * repeat) * 1e-3,  # pJ -> nJ
+        area=area * repeat,
+        power=power * repeat,
+        l1_bytes=l1_bytes,
+        l2_bytes=l2_bytes,
+        macs=macs * repeat,
+        util=macs / jnp.maximum(comp * pe, 1.0),
+    )
+
+
+def evaluate(layers, pe, kt, dataflow):
+    """Evaluate design points against layers.  Fully broadcastable.
+
+    Args:
+      layers:   (..., NUM_FIELDS) int/float array of layer descriptors.
+      pe:       (...,) #PEs   >= 1.
+      kt:       (...,) per-PE tile count >= 1.
+      dataflow: (...,) in {DLA, EYE, SHI} (scalar or per-layer for MIX).
+
+    Returns CostOut of broadcast shape; all values are per-layer *including*
+    the ``repeat`` multiplicity (latency/energy/area/power all scale by it:
+    repeated identical layers are separate pipeline partitions with tied
+    assignments -- see layers.py).
+    """
+    layers = jnp.asarray(layers)
+    f = lambda i: layers[..., i].astype(jnp.float32)
+    return core_cost(
+        f(F_K), f(F_C), f(F_Y), f(F_X), f(F_R), f(F_S),
+        f(F_TYPE), f(F_REPEAT),
+        jnp.asarray(pe, jnp.float32), jnp.asarray(kt, jnp.float32),
+        jnp.asarray(dataflow))
+
+
+def evaluate_point(layer_row, pe, kt, dataflow):
+    """Single layer x single design point (still jit-friendly)."""
+    return evaluate(layer_row, pe, kt, dataflow)
+
+
+def model_cost(layers, pe, kt, dataflow, scenario: str = "LP"):
+    """Aggregate whole-model cost for a per-layer assignment.
+
+    scenario "LP": every layer is its own partition -> latency/energy/area/
+                   power all sum over layers.
+    scenario "LS": one shared accelerator -> latency/energy sum (layers run
+                   sequentially) but area/power are the max over layers (the
+                   single design must provision for the largest demand).
+    """
+    out = evaluate(layers, pe, kt, dataflow)
+    lat = jnp.sum(out.latency, axis=-1)
+    en = jnp.sum(out.energy, axis=-1)
+    if scenario == "LP":
+        area = jnp.sum(out.area, axis=-1)
+        power = jnp.sum(out.power, axis=-1)
+    elif scenario == "LS":
+        area = jnp.max(out.area, axis=-1)
+        power = jnp.max(out.power, axis=-1)
+    else:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    return CostOut(lat, en, area, power,
+                   jnp.max(out.l1_bytes, axis=-1),
+                   jnp.max(out.l2_bytes, axis=-1),
+                   jnp.sum(out.macs, axis=-1),
+                   jnp.mean(out.util, axis=-1))

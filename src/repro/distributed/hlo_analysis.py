@@ -1,0 +1,205 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but *not* collective
+traffic, so we parse the compiled HLO: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute op's result shapes are
+summed (result bytes are the standard per-device traffic proxy; all-reduce
+gets a 2x wire factor for its reduce+broadcast ring phases; reduce-scatter
+results are scaled by the replica-group size back to operand bytes, since
+the wire moves the full reduced tensor, not the output shard -- see
+EXPERIMENTS.md SRoofline for the exact accounting).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  "bf16[16,512,4096]{2,1,0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (.*?) (" + "|".join(
+        c.replace("-", r"\-") + r"(?:-start|-done)?" for c in COLLECTIVES)
+    + r")\(",)
+
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+# replica_groups=[4,8]<=[32]...  (iota form: [n_groups, group_size]) or the
+# explicit {{0,1,...},{...}} list form.
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _shape_bytes(type_str: str, f32_elem_bytes: int = 4) -> int:
+    """Sum tensor bytes in an HLO type string.
+
+    ``f32_elem_bytes=2`` counts f32 tensors at bf16 width: the CPU host
+    backend's float-normalization pass upcasts bf16 compute to f32 *before*
+    SPMD collective insertion, so a CPU-compiled HLO reports 4 B/elem wire
+    traffic for tensors that are bf16 in the program and would be bf16 on
+    the TPU target.  The dry-run records both raw and corrected numbers.
+    """
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nb = f32_elem_bytes if dtype == "f32" else _DTYPE_BYTES[dtype]
+        total += n * nb
+    return total
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"=.*while\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into named computations; return {name: [lines]}."""
+    comps: Dict[str, list] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count from a while condition: the s32 limit constant."""
+    consts = [int(m.group(1)) for ln in cond_lines
+              for m in _CONST_RE.finditer(ln)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, float]:
+    """Execution count per computation, following while trip counts.
+
+    XLA prints each while body ONCE; anything inside it actually runs
+    trip-count times (nested scans multiply).  We walk the call graph from
+    ENTRY: while bodies inherit caller_mult * trip, plain calls/fusions
+    inherit caller_mult.  Conservative: unknown structures default to 1x.
+    """
+    comps = _parse_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 50 or name not in comps:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for line in comps[name]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = _trip_count(comps.get(cond, []))
+                visit(body, m * trips, depth + 1)
+                visit(cond, m * (trips + 1), depth + 1)
+                continue
+            for cm in _CALL_RE.finditer(line):
+                visit(cm.group(1), m, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    return mult
+
+
+def collective_stats(hlo_text: str, *, scale_loops: bool = True,
+                     f32_elem_bytes: int = 4) -> Dict[str, float]:
+    """Per-device collective bytes by op type (+ 'total_wire_bytes').
+
+    With scale_loops=True (default), collectives inside while bodies are
+    multiplied by the loop trip count (XLA prints scan bodies once).
+    ``f32_elem_bytes=2`` applies the CPU-host bf16->f32 normalization
+    correction (see _shape_bytes).
+    """
+    mult = computation_multipliers(hlo_text) if scale_loops else {}
+    comps = _parse_computations(hlo_text)
+    out: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for comp_name, lines in comps.items():
+        m = mult.get(comp_name, 1.0) if scale_loops else 1.0
+        if m == 0.0:
+            m = 1.0
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            type_str, op = om.groups()
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue  # avoid double counting async pairs
+            b = _shape_bytes(type_str, f32_elem_bytes)
+            if base == "reduce-scatter":
+                # Result is the post-scatter SHARD; wire traffic is the
+                # (n-1)/n of the full reduced operand ~= result * n.  A
+                # result-bytes proxy would under-count by the group size.
+                b *= _group_size(line)
+            out[base] += b * m
+            counts[base] += 1
+    out["total_bytes"] = sum(out[c] for c in COLLECTIVES)
+    out["total_wire_bytes"] = sum(out[c] * WIRE_FACTOR[c]
+                                  for c in COLLECTIVES)
+    for c in COLLECTIVES:
+        out[f"n_{c}"] = counts[c]
+    return out
+
+
+# TPU v5e hardware constants (the roofline denominators).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link (~per chip, 1 axis)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float) -> Dict[str, float]:
+    """The three roofline times (seconds) for one step on one chip."""
+    t_compute = flops_per_device / PEAK_FLOPS_BF16
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = wire_bytes_per_device / ICI_BW
+    terms = {"t_compute": t_compute, "t_memory": t_memory,
+             "t_collective": t_collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom
+    total = max(terms["t_compute"], terms["t_memory"], terms["t_collective"])
+    terms["bound_seconds"] = total
+    terms["compute_fraction"] = t_compute / total if total else 0.0
+    return terms

@@ -1,0 +1,320 @@
+"""Per-architecture sharding rules (DP / FSDP / TP / EP / SP).
+
+Parameter placement is rule-based on the parameter *path*: the big matmul
+weights are TP-sharded on ``model`` along their parallel dimension and
+FSDP-sharded on ``data`` along the other; experts put their E dim on
+``model`` (EP); norms/scalars replicate.  Every assignment is guarded by
+divisibility against the actual mesh -- a dim that doesn't divide falls back
+to the next candidate axis or replication, so the same rules serve the
+production 16x16 mesh, the 2x16x16 multi-pod mesh and tiny test meshes.
+
+Activation sharding enters the model through a ShardingPolicy
+(models/common.py): batch on ('pod','data'), sequence-parallel residual on
+``model`` for training shapes, KV-cache sequence on ``model`` for decode
+(the flash-decode layout), MoE group/expert dims on data/model.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ShardingPolicy
+
+
+def norm_path(kp) -> str:
+    """tree key-path -> 'blocks/attn/wq' style string the rules match on."""
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def assign_spec(mesh, shape, prefs) -> P:
+    """Greedy divisibility-guarded axis assignment.
+
+    prefs: per-dim tuple of candidate axes (each an axis name or tuple of
+    names), highest priority first.  An axis is used at most once.
+    """
+    used = set()
+    spec = []
+    for dim, cands in zip(shape, prefs):
+        chosen = None
+        for ax in cands:
+            names = ax if isinstance(ax, tuple) else (ax,)
+            if any(n not in mesh.axis_names or n in used for n in names):
+                continue
+            if dim % _axis_size(mesh, ax) == 0 and dim > 0:
+                chosen = ax
+                used.update(names)
+                break
+        spec.append(chosen)
+    return P(*spec)
+
+
+# Parameter path -> per-dim axis preferences for the *trailing* dims; any
+# leading (stack) dims are replicated.  fsdp = ('data',) [+ optionally
+# ('pod',) when zero-3 across pods is enabled]; tp = 'model'.
+_RULES = [
+    # MoE expert banks: (E, D, F) / (E, F, D) -- EP on model.
+    (r"moe.*w_(gate|up)$", (("model",), ("data",), ())),
+    (r"moe.*w_down$", (("model",), (), ("data",))),
+    (r"moe.*router$", (("data",), ())),
+    # Embeddings.
+    (r"embed.*tok$", (("model",), ("data",))),
+    (r"embed.*unembed$", (("data",), ("model",))),
+    # Attention.
+    (r"attn.*w[qkv]$", (("data",), ("model",))),
+    (r"attn.*wo$", (("model",), ("data",))),
+    (r"attn.*b[qkv]$", (("model",),)),
+    # Dense MLP.
+    (r"mlp.*w_(gate|up)$", (("data",), ("model",))),
+    (r"mlp.*w_down$", (("model",), ("data",))),
+    # Mamba: in_proj is row-parallel TP (irregular output dim), out_proj
+    # column-parallel.
+    (r"mamba.*in_proj$", (("model",), ("data",))),
+    (r"mamba.*out_proj$", (("model",), ("data",))),
+    (r"mamba.*conv_[wb]$", ((), ("model",))),
+]
+
+
+def _fsdp_spec(mesh, shape) -> P:
+    """ZeRO-3 placement: shard the largest divisible dim over ALL mesh axes
+    (merged); no tensor parallelism.  Small/indivisible leaves replicate."""
+    axes = tuple(mesh.axis_names)
+    n = _axis_size(mesh, axes)
+    if not shape or int(np.prod(shape)) < 2 * n:
+        return P()
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % n == 0:
+            spec = [None] * len(shape)
+            spec[i] = axes
+            return P(*spec)
+    return P()
+
+
+def param_spec(mesh, path: str, shape, mode: str = "tp") -> P:
+    """mode 'tp' (baseline): TP on model + FSDP on data, per _RULES.
+    mode 'tp_serve': TP on model only -- params replicated across the data
+                     axis (serving replicas re-gather nothing per step).
+    mode 'fsdp': pure ZeRO-3 over the merged mesh (no TP).
+    mode 'dp':   fully replicated parameters (pure data parallel)."""
+    if mode == "dp":
+        return P()
+    if mode == "fsdp":
+        return _fsdp_spec(mesh, shape)
+    for pat, prefs in _RULES:
+        if re.search(pat, path):
+            n_lead = len(shape) - len(prefs)
+            if n_lead < 0:
+                return P()
+            full = tuple(() for _ in range(n_lead)) + tuple(prefs)
+            if mode == "tp_serve":
+                full = tuple(
+                    tuple(ax for ax in cands
+                          if ax not in ("data", "pod")
+                          and not (isinstance(ax, tuple)
+                                   and set(ax) & {"data", "pod"}))
+                    for cands in full)
+            return assign_spec(mesh, shape, full)
+    return P()  # norms, scalars, biases without rules: replicate
+
+
+def tree_shardings(mesh, tree, mode: str = "tp"):
+    """NamedSharding pytree for params / optimizer state."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        spec = param_spec(mesh, norm_path(kp), np.shape(leaf), mode)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sds_with_sharding(mesh, tree, mode: str = "tp"):
+    """ShapeDtypeStructs carrying their target shardings (for AOT lower)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        spec = param_spec(mesh, norm_path(kp), leaf.shape, mode)
+        out.append(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation policies.
+# ---------------------------------------------------------------------------
+def _batch_axis(mesh, batch: int, *, include_model: bool = False):
+    """Largest data-parallel axis combo that divides the global batch."""
+    cands = (("pod", "data", "model"), ("data", "model"),
+             ("pod", "data"), ("data",), ("pod",)) if include_model else \
+            (("pod", "data"), ("data",), ("pod",))
+    for cand in cands:
+        if all(a in mesh.axis_names for a in cand):
+            if batch % _axis_size(mesh, cand) == 0:
+                return cand
+    return None
+
+
+def make_policy(mesh, *, batch: int, kind: str = "train",
+                sp: bool = True, mode: str = "tp") -> ShardingPolicy:
+    """Activation-sharding hooks for a given input shape.
+
+    mode "tp"/"tp_serve" (baseline): residual stream is sequence-parallel
+    on ``model`` (when divisible) for train/prefill, heads/ffn TP on
+    ``model``; decode uses the KV-cache layout.
+    mode "fsdp"/"dp": every mesh axis carries batch -- activations shard
+    dim 0 only; layer math is fully local (ZeRO-3 weight gathers / pure-DP
+    gradient reduction are the only collectives).
+    """
+    if mode in ("fsdp", "dp"):
+        return _batch_only_policy(mesh, batch)
+    dp = _batch_axis(mesh, batch)
+    msize = mesh.shape["model"]
+
+    def cons(x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def resid(x):
+        if x.ndim != 3:
+            return x
+        seq_ok = sp and kind != "decode" and x.shape[1] % msize == 0
+        return cons(x, P(dp, "model" if seq_ok else None, None))
+
+    def heads(x):  # (B, T, H, hd): q stays sequence-sharded in SP mode
+        if x.ndim != 4:
+            return x
+        if sp and kind != "decode" and x.shape[1] % msize == 0:
+            return cons(x, P(dp, "model", None, None))
+        if x.shape[2] % msize == 0:
+            return cons(x, P(dp, None, "model", None))
+        return x
+
+    def kv_full(x):  # (B, S, Kv, hd): sequence-complete per device
+        if x.ndim != 4 or kind == "decode":
+            return x
+        return cons(x, P(dp, None, None, None))
+
+    def ssm_x(x):  # (B, T, H, P): full sequence; heads on model if divisible
+        if x.ndim != 4:
+            return x
+        hax = "model" if x.shape[2] % msize == 0 else None
+        return cons(x, P(dp, None, hax, None))
+
+    def ffn(x):    # (B, T, F)
+        if x.ndim != 3 or x.shape[2] % msize:
+            return x
+        return cons(x, P(dp, None, "model"))
+
+    def experts(x):  # (n_groups, E, C, D)
+        if x.ndim != 4 or x.shape[1] % msize:
+            return x
+        ng = dp if (dp and x.shape[0] % _axis_size(mesh, dp) == 0) else None
+        return cons(x, P(ng, "model", None, None))
+
+    # Routing/dispatch stays fully local: the group dim carries the merged
+    # (batch x seq) sharding over EVERY mesh axis, so the only MoE traffic
+    # is the all-to-all at the expert boundary (the pol.experts constraint).
+    dpm = (tuple(dp) if dp else ()) + ("model",)
+
+    def dispatch(x):  # (n_groups, g, E*C)
+        if x.ndim != 3 or x.shape[0] % _axis_size(mesh, dpm):
+            return x
+        return cons(x, P(dpm, None, None))
+
+    def experts_flat(x):  # (n_groups, E*C, D/F): same local layout
+        if x.ndim != 3 or x.shape[0] % _axis_size(mesh, dpm):
+            return x
+        return cons(x, P(dpm, None, None))
+
+    def logits(x):  # (B, T, V)
+        if x.ndim != 3 or x.shape[2] % msize:
+            return x
+        return cons(x, P(dp, None, "model"))
+
+    def cache(x):  # (B, Tmax, Kv, hd): sequence on model (flash-decode)
+        if x.ndim != 4 or x.shape[1] % msize:
+            return x
+        bax = dp if (dp and x.shape[0] % _axis_size(mesh, dp) == 0) else None
+        return cons(x, P(bax, "model", None, None))
+
+    return ShardingPolicy(resid=resid, heads=heads, kv_full=kv_full,
+                          ffn=ffn, experts=experts, dispatch=dispatch,
+                          experts_flat=experts_flat, ssm_x=ssm_x,
+                          logits=logits, cache=cache)
+
+
+def _batch_only_policy(mesh, batch: int) -> ShardingPolicy:
+    """fsdp/dp activation policy: dim 0 (batch or group) over ALL axes."""
+    dp = _batch_axis(mesh, batch, include_model=True)
+
+    def lead(x):
+        if (dp is None or x.ndim < 1
+                or x.shape[0] % _axis_size(mesh, dp)):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))
+
+    return ShardingPolicy(resid=lead, heads=lead, kv_full=lead, ffn=lead,
+                          experts=lead, dispatch=lead, experts_flat=lead,
+                          ssm_x=lead, logits=lead, cache=lead)
+
+
+def batch_sharding(mesh, batch: int, *, mode: str = "tp"):
+    dp = _batch_axis(mesh, batch, include_model=mode in ("fsdp", "dp"))
+    return NamedSharding(mesh, P(dp, None))
+
+
+def cache_shardings(mesh, cache, *, batch: int):
+    """Shardings for the decode-cache pytree (flash-decode layout)."""
+    dp = _batch_axis(mesh, batch)
+    msize = mesh.shape["model"]
+
+    def spec_for(path: str, leaf) -> P:
+        shp = leaf.shape
+        if re.search(r"attn_[kv]|cross_[kv]", path) and len(shp) == 5:
+            # (sites, B, T, Kv, hd)
+            bax = dp if (dp and shp[1] % _axis_size(mesh, dp) == 0) else None
+            sax = "model" if shp[2] % msize == 0 else None
+            return P(None, bax, sax, None, None)
+        if re.search(r"mamba.*ssm", path):
+            # (..., B, H, P, S): heads on model.
+            prefs = tuple(() for _ in shp[:-4]) + (
+                (("pod", "data"), ("data",)), ("model",), (), ())
+            return assign_spec(mesh, shp, prefs)
+        if re.search(r"mamba.*conv", path):
+            prefs = tuple(() for _ in shp[:-3]) + (
+                (("pod", "data"), ("data",)), (), ("model",))
+            return assign_spec(mesh, shp, prefs)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for kp, leaf in flat:
+        path = norm_path(kp)
+        if hasattr(leaf, "shape") and leaf.ndim > 0:
+            out.append(NamedSharding(mesh, spec_for(path, leaf)))
+        else:
+            out.append(NamedSharding(mesh, P()))
+    return jax.tree_util.tree_unflatten(treedef, out)

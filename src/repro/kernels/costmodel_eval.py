@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: batched (design-point x layer) cost evaluation.
+
+This is the compute hot-spot of the whole search: every REINFORCE epoch,
+GA generation, grid sweep or baseline iteration evaluates a *batch* of
+per-layer (PE, Buf, dataflow) assignments against the workload's layer
+descriptors.  On TPU the batch can be millions of design points (distributed
+GA populations / vmapped episode batches), so the evaluation is tiled through
+VMEM explicitly:
+
+  grid = (B / TB, N / TN)              B = design-point batch, N = layers
+  layers   : (NUM_FIELDS, N)  f32  -> block (NUM_FIELDS, TN)   [broadcast row]
+  pe,kt,df : (B, N)           f32  -> block (TB, TN)
+  outputs  : 4 x (B, N)       f32  -> block (TB, TN)
+
+TN = 128 puts the layer axis in the lane dimension (VPU 8x128 registers);
+TB = 8 fills the sublane dimension.  The whole model is elementwise
+transcendental-light arithmetic (ceil/div/min/max/sqrt), so one fused pass
+through VMEM is optimal -- the kernel's job is to avoid materializing the
+~20 intermediate (B, N) tensors the unfused jnp oracle round-trips through
+HBM.  VMEM footprint per step: (8 + 3*TB + 4*TB) * TN * 4 B ~= 32 KiB << 16 MiB.
+
+The kernel body calls :func:`repro.costmodel.maestro.core_cost` -- the exact
+ops the ``ref.py`` oracle lowers -- so allclose agreement is structural.
+Validated in interpret mode on CPU (tests/test_kernels.py sweeps shapes and
+dtypes against the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.costmodel import maestro
+from repro.costmodel.layers import NUM_FIELDS
+
+# Tile sizes: lane dim 128, sublane 8 (float32 VREG tile on TPU).
+TB = 8
+TN = 128
+
+
+def _cost_kernel(layers_ref, pe_ref, kt_ref, df_ref,
+                 lat_ref, en_ref, area_ref, pw_ref):
+    """One (TB, TN) tile: unpack layer fields, run the shared model core."""
+    fields = [layers_ref[i, :][None, :] for i in range(NUM_FIELDS)]
+    K, C, Y, X, R, S, ltype, repeat = fields
+    out = maestro.core_cost(K, C, Y, X, R, S, ltype, repeat,
+                            pe_ref[...], kt_ref[...], df_ref[...])
+    lat_ref[...] = out.latency
+    en_ref[...] = out.energy
+    area_ref[...] = out.area
+    pw_ref[...] = out.power
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cost_eval_padded(layers_t, pe, kt, df, *, interpret: bool = True):
+    """Run the kernel on pre-padded inputs.
+
+    layers_t: (NUM_FIELDS, N) f32, N % TN == 0.
+    pe/kt/df: (B, N) f32, B % TB == 0.
+    Returns (latency, energy, area, power), each (B, N) f32.
+    """
+    B, N = pe.shape
+    grid = (B // TB, N // TN)
+    layer_spec = pl.BlockSpec((NUM_FIELDS, TN), lambda i, j: (0, j))
+    bn_spec = pl.BlockSpec((TB, TN), lambda i, j: (i, j))
+    out_shape = [jax.ShapeDtypeStruct((B, N), jnp.float32)] * 4
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[layer_spec, bn_spec, bn_spec, bn_spec],
+        out_specs=[bn_spec] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(layers_t, pe, kt, df)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: flash-decode GQA attention (one token vs a long KV).
+
+Serving the assigned architectures at decode_32k / long_500k means one query
+token attending over a KV cache of T = 32k..512k entries.  The naive lowering
+materializes (Hq, T) logits and softmax weights in HBM -- at T = 512k that is
+the whole memory story.  This kernel streams the cache through VMEM in TT
+chunks with an online-softmax accumulator (the flash-attention recurrence),
+so HBM traffic is exactly one read of K and V:
+
+  grid = (B, Hkv, T / TT)          innermost = cache chunks
+  q   : (B, Hq, D)     -> block (1, G, D)      G = Hq / Hkv (GQA group)
+  k,v : (B, T, Hkv, D) -> block (1, TT, 1, D)
+  out : (B, Hq, D)     -> block (1, G, D)
+  scratch (VMEM): m (G,1), l (G,1), acc (G,D)  -- the online-softmax state
+
+TT = 512 and D = 128 keep the (G, TT) logit tile and (TT, D) value tile
+MXU-shaped; VMEM per step ~ (TT*D*2 + G*D + G*TT)*4B ~= 0.6 MiB.
+
+The same kernel is the TPU-native analogue of the paper's "HW performance
+estimator inner loop" insight: keep the hot operand (here the KV stream,
+there the layer tile) resident and never round-trip intermediates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TT = 512  # KV-chunk tile
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    t = pl.program_id(2)
+    nT = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                   # (G, D)
+    k = k_ref[0, :, 0, :]             # (TT, D)
+    v = v_ref[0, :, 0, :]             # (TT, D)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, TT)
+
+    m_prev = m_ref[...]               # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)            # (G, TT)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(t == nT - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_padded(q, k, v, *, interpret: bool = True):
+    """q: (B, Hq, D); k, v: (B, T, Hkv, D), T % TT == 0, Hq % Hkv == 0."""
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, T // TT)
+    out = pl.pallas_call(
+        _flash_decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, TT, 1, D), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, TT, 1, D), lambda b, h, t: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,417 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (architecture x input shape)
+cell on the production meshes and extract the roofline raw numbers.
+
+MUST be run as its own process (the two lines above must execute before any
+other jax-touching import -- jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out results/dryrun.jsonl
+
+Per cell it records: per-device HLO FLOPs + bytes (cost_analysis), peak /
+argument / output bytes per device (memory_analysis), per-device collective
+bytes by op type (parsed from the compiled HLO), MODEL_FLOPS (6*N_active*D
+for train, 2*N_active per decoded token), and the derived three roofline
+terms (distributed/hlo_analysis.py).
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import InputShape  # noqa: E402
+from repro.distributed import analytic, hlo_analysis, sharding  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.training import optim  # noqa: E402
+
+
+def skip_reason(cfg, shape: InputShape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is pure full-attention (DESIGN.md "
+                "SArch-applicability)")
+    return None
+
+
+def input_specs(arch: str, shape_name: str, mesh, mode: str = "tp"):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Weak-type-correct, carries target shardings, allocates nothing.
+    """
+    cfg = configs.get(arch)
+    shape = configs.get_shape(shape_name)
+    B, T = shape.global_batch, shape.seq_len
+    bs = sharding.batch_sharding(mesh, B, mode=mode)
+    tok = jax.ShapeDtypeStruct((B, T), jnp.int32, sharding=bs)
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = tok
+        if shape.kind == "train":
+            specs["labels"] = tok
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+                sharding=sharding.batch_sharding(mesh, B))
+        elif cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+                sharding=sharding.batch_sharding(mesh, B))
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct(
+            (B,), jnp.int32,
+            sharding=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))
+        cache = jax.eval_shape(
+            lambda: lm.init_cache(cfg, B, T, dtype=cfg.compute_dtype))
+        cache_sh = sharding.cache_shardings(mesh, cache, batch=B)
+        specs["cache"] = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s)
+            if hasattr(l, "shape") else l, cache, cache_sh)
+        if cfg.family in ("audio", "vlm"):
+            S = cfg.encoder_seq if cfg.family == "audio" else cfg.vision_seq
+            sites = (cfg.num_layers if cfg.family == "audio"
+                     else cfg.num_layers // cfg.cross_attn_period)
+            xkv = jax.ShapeDtypeStruct(
+                (sites, B, S, cfg.num_kv_heads, cfg.hd()),
+                jnp.dtype(cfg.compute_dtype),
+                sharding=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(None, None, None, None,
+                                                     None)))
+            specs["cache"] = specs["cache"]._replace(cross_k=xkv,
+                                                     cross_v=xkv)
+    return specs
+
+
+def model_flops(cfg, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6*N_active*D tokens (train) / 2*N_active*B (decode)."""
+    n = cfg.param_count()
+    if cfg.num_experts:
+        inactive = (cfg.num_layers * (cfg.num_experts - cfg.experts_per_token)
+                    * 3 * cfg.d_model * cfg.d_ff)
+        n = n - inactive
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token / sequence
+
+
+def measure_remat_factor(arch: str, remat: str) -> float:
+    """Measured train factor (fwd+bwd+recompute) for a remat policy.
+
+    Compiles a reduced-depth UNROLLED single-device variant (XLA counts
+    unrolled bodies exactly) with remat='full' (factor 4 by construction)
+    and with the requested policy, and scales: factor = 4 * flops(policy)
+    / flops(full).  Memoized per (arch, remat).
+    """
+    if remat in ("full", True):
+        return 4.0
+    key = (arch, remat)
+    if key in _REMAT_FACTOR_CACHE:
+        return _REMAT_FACTOR_CACHE[key]
+    cfg = configs.get_smoke(arch)
+    opt = optim.Adam(lr=1e-4)
+    B, T = 2, 128
+    toks = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    elif cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+
+    def flops_for(policy):
+        lm.UNROLL_STACKS = True
+        try:
+            def init():
+                p = lm.init_params(jax.random.PRNGKey(0), cfg)
+                return p, opt.init(p)
+
+            pshapes = jax.eval_shape(init)
+            step = partial(lm.train_step, cfg=cfg, optimizer=opt,
+                           remat=policy)
+            c = jax.jit(step).lower(pshapes[0], pshapes[1], batch).compile()
+            return float(c.cost_analysis().get("flops", 0.0))
+        finally:
+            lm.UNROLL_STACKS = False
+
+    f_full, f_pol = flops_for("full"), flops_for(remat)
+    factor = 4.0 * (f_pol / f_full) if f_full else 4.0
+    _REMAT_FACTOR_CACHE[key] = factor
+    return factor
+
+
+_REMAT_FACTOR_CACHE: dict = {}
+
+
+def resolve_mode(mode: str, cfg, shape: InputShape) -> str:
+    """'auto' = the SPerf-winning strategy per cell class:
+
+    * train, replica fits comfortably on a chip (< 4 GB bf16) -> ``dp``
+      (19x on mamba2; zero gather traffic, one gradient all-reduce);
+    * train, dense + large -> ``fsdp`` (ZeRO-3; 1.75-1.84x on llama/qwen3);
+    * train, MoE + large -> ``tp`` (expert parallelism IS the
+      communication-minimal layout for expert banks: only routed tokens
+      move; ZeRO-3 re-gathers the full expert weights and measured 3x
+      WORSE on phi3.5/qwen3-moe -- a confirmed-negative result);
+    * prefill/decode -> ``tp_serve`` (params never re-gathered; 14.5x on
+      qwen3 decode).
+    """
+    if mode != "auto":
+        return mode
+    if shape.kind == "train":
+        if cfg.param_count() * 2 < 4e9:
+            return "dp"
+        return "tp" if cfg.num_experts else "fsdp"
+    return "tp_serve"
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *, sp: bool = True,
+                  moe_group: int = 256, mode: str = "tp",
+                  explicit_out: bool = False, remat: str = "full"):
+    """Lower one cell.  ``mode`` picks the sharding strategy (tp | tp_serve
+    | fsdp | dp | pp | auto -- see distributed/sharding.py and
+    resolve_mode); ``explicit_out`` pins the train step's output shardings
+    to the parameter shardings (SPerf iteration, refuted -- kept as an
+    ablation flag)."""
+    cfg = configs.get(arch)
+    shape = configs.get_shape(shape_name)
+    mode = resolve_mode(mode, cfg, shape)
+    pol = sharding.make_policy(mesh, batch=shape.global_batch,
+                               kind=shape.kind, sp=sp, mode=mode)
+    specs = input_specs(arch, shape_name, mesh, mode=mode)
+
+    if shape.kind == "train" and mode == "pp":
+        from repro.distributed import pipeline
+        opt = optim.Adam(lr=1e-4)
+
+        def init():
+            return pipeline.init_pp(jax.random.PRNGKey(0), cfg, opt)
+
+        pshapes, oshapes = jax.eval_shape(init)
+        psh, osh = pipeline.pp_shardings(mesh, pshapes, oshapes)
+        p_sds = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            pshapes, psh)
+        o_sds = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            oshapes, osh)
+        n_micro = mesh.shape["model"]  # M = S: bubble factor (2S-1)/S
+        step = pipeline.make_pp_train_step(cfg, opt, mesh, n_micro=n_micro)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        with mesh:
+            lowered = fn.lower(p_sds, o_sds, specs)
+        return lowered, cfg, shape
+
+    if shape.kind == "train":
+        opt = optim.Adam(lr=1e-4)
+
+        def init():
+            p = lm.init_params(jax.random.PRNGKey(0), cfg)
+            p = jax.tree.map(
+                lambda x: x.astype(cfg.param_dtype)
+                if x.dtype == jnp.float32 else x, p)
+            return p, opt.init(p)
+
+        pshapes = jax.eval_shape(init)
+        p_sds = sharding.sds_with_sharding(mesh, pshapes[0], mode)
+        o_sds = sharding.sds_with_sharding(mesh, pshapes[1], mode)
+        ngroups = max(1, shape.global_batch * shape.seq_len // moe_group)
+        step = partial(lm.train_step, cfg=cfg, optimizer=opt, pol=pol,
+                       moe_groups=ngroups, remat=remat)
+        kw = {}
+        if explicit_out:
+            kw["out_shardings"] = (
+                sharding.tree_shardings(mesh, pshapes[0], mode),
+                sharding.tree_shardings(mesh, pshapes[1], mode),
+                jax.sharding.NamedSharding(mesh,
+                                           jax.sharding.PartitionSpec()))
+        fn = jax.jit(step, donate_argnums=(0, 1), **kw)
+        with mesh:
+            lowered = fn.lower(p_sds, o_sds, specs)
+        return lowered, cfg, shape
+
+    if shape.kind == "prefill":
+        def init():
+            p = lm.init_params(jax.random.PRNGKey(0), cfg)
+            return jax.tree.map(
+                lambda x: x.astype(cfg.param_dtype)
+                if x.dtype == jnp.float32 else x, p)
+
+        p_sds = sharding.sds_with_sharding(mesh, jax.eval_shape(init), mode)
+        aux_keys = [k for k in specs if k not in ("tokens",)]
+        ngroups = max(1, shape.global_batch * shape.seq_len // moe_group)
+
+        def step(params, tokens, aux):
+            return lm.prefill(params, cfg, tokens, aux or None, pol=pol,
+                              moe_groups=ngroups)
+
+        aux = {k: specs[k] for k in aux_keys}
+        with mesh:
+            lowered = jax.jit(step).lower(p_sds, specs["tokens"], aux)
+        return lowered, cfg, shape
+
+    # decode
+    def init():
+        p = lm.init_params(jax.random.PRNGKey(0), cfg)
+        return jax.tree.map(
+            lambda x: x.astype(cfg.param_dtype)
+            if x.dtype == jnp.float32 else x, p)
+
+    p_sds = sharding.sds_with_sharding(mesh, jax.eval_shape(init), mode)
+
+    def step(params, cache, token):
+        return lm.serve_step(params, cache, token, cfg, pol=pol)
+
+    fn = jax.jit(step, donate_argnums=(1,))
+    with mesh:
+        lowered = fn.lower(p_sds, specs["cache"], specs["token"])
+    return lowered, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, sp: bool = True, moe_group: int = 256,
+             mode: str = "tp", explicit_out: bool = False,
+             wire_bf16: bool = True, remat: str = "full",
+             verbose: bool = True) -> dict:
+    cfg = configs.get(arch)
+    shape = configs.get_shape(shape_name)
+    mode = resolve_mode(mode, cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "mode": mode, "remat": remat, "status": "ok"}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    try:
+        lowered, cfg, shape = build_lowered(arch, shape_name, mesh, sp=sp,
+                                            moe_group=moe_group, mode=mode,
+                                            explicit_out=explicit_out,
+                                            remat=remat)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # Wire accounting: f32 collectives counted at bf16 width by default
+        # (the CPU host pipeline upcasts bf16 before SPMD -- see
+        # hlo_analysis._shape_bytes); raw-HLO numbers recorded alongside.
+        f32b = 2 if wire_bf16 else 4
+        coll = hlo_analysis.collective_stats(hlo, f32_elem_bytes=f32b)
+        coll_raw = hlo_analysis.collective_stats(hlo, scale_loops=False)
+        # XLA cost_analysis counts while (scan) bodies once (verified in
+        # tests/test_analytic.py), so the roofline numerators come from the
+        # exact analytic accounting; raw HLO numbers are recorded alongside.
+        tf = (measure_remat_factor(arch, remat)
+              if shape.kind == "train" else 4.0)
+        rec["train_factor"] = tf
+        an = analytic.summarize(cfg, shape, n_dev, train_factor=tf)
+        flops_dev = an["flops_per_device"]
+        bytes_dev = an["bytes_per_device"]
+        if mode == "pp":
+            # GPipe bubble: the SPMD schedule executes (M+S-1)/M x the
+            # useful per-stage work -- charge the compute term for it.
+            S = mesh.shape["model"]
+            M = S
+            rec["pipeline_overhead"] = (M + S - 1) / M
+            flops_dev *= rec["pipeline_overhead"]
+        mf = model_flops(cfg, shape)
+        terms = hlo_analysis.roofline_terms(
+            flops_dev, bytes_dev, coll["total_wire_bytes"])
+        rec.update(
+            devices=n_dev,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+            hlo_flops_per_device=float(ca.get("flops", 0.0)),
+            hlo_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+            peak_bytes_per_device=int(ma.peak_memory_in_bytes),
+            argument_bytes_per_device=int(ma.argument_size_in_bytes),
+            output_bytes_per_device=int(ma.output_size_in_bytes),
+            collectives={k: v for k, v in coll.items()},
+            collectives_unscaled={k: v for k, v in coll_raw.items()},
+            model_flops_total=mf,
+            model_flops_per_device=mf / n_dev,
+            useful_flops_ratio=(mf / n_dev) / flops_dev if flops_dev else 0,
+            **{k: v for k, v in terms.items()},
+        )
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    if verbose:
+        msg = {k: rec.get(k) for k in
+               ("arch", "shape", "mesh", "status", "compile_s", "bottleneck",
+                "compute_fraction", "peak_bytes_per_device")}
+        print(json.dumps(msg), flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence parallelism (perf ablation)")
+    ap.add_argument("--moe-group", type=int, default=256)
+    ap.add_argument("--mode", default="tp",
+                    choices=["tp", "tp_serve", "fsdp", "dp", "pp", "auto"],
+                    help="sharding strategy (SPerf hillclimb variants; "
+                         "pp = GPipe stages on the model axis, dense train; "
+                         "auto = the SPerf-winning strategy per cell class)")
+    ap.add_argument("--explicit-out", action="store_true",
+                    help="pin train output shardings (grad reduce-scatter)")
+    ap.add_argument("--raw-wire", action="store_true",
+                    help="disable the f32->bf16 wire-byte correction")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"],
+                    help="activation-checkpoint policy for train cells")
+    args = ap.parse_args(argv)
+
+    archs = (configs.ARCH_IDS if args.arch == "all"
+             else [configs.canonical(a) for a in args.arch.split(",")])
+    shapes = ([s.name for s in configs.SHAPES] if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    rec = run_cell(arch, shape, mp, sp=not args.no_sp,
+                                   moe_group=args.moe_group, mode=args.mode,
+                                   explicit_out=args.explicit_out,
+                                   wire_bf16=not args.raw_wire,
+                                   remat=args.remat)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    n_fail += rec["status"] == "error"
+    print(f"done; {n_fail} errors", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

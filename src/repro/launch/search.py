@@ -1,0 +1,125 @@
+"""ConfuciuX search launcher: the paper's workflow as a CLI.
+
+    PYTHONPATH=src python -m repro.launch.search --workload mobilenet_v2 \
+        --objective latency --constraint area --platform iot \
+        --dataflow dla --epochs 5000 --out results/search.json
+
+    # Assigned architecture as the search target (LLM serving workload):
+    PYTHONPATH=src python -m repro.launch.search --arch qwen3-32b --tokens 512
+
+Inputs mirror Fig. 3: target model, deployment scenario (LS/LP), objective
+(latency/energy), platform constraint (Table II).  Output: the optimized
+per-layer (PE, Buffer[, dataflow]) assignment + both stage values.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.core import env as env_lib
+from repro.core import ga as ga_lib
+from repro.core import reinforce, search
+from repro.costmodel import dataflows as dfl
+from repro.costmodel import workloads as workloads_lib
+from repro.costmodel.layers import total_macs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--workload", help="paper workload name "
+                     f"(one of {workloads_lib.workload_names()})")
+    src.add_argument("--arch", help="assigned architecture id (the model is "
+                     "lowered to its per-layer GEMM/CONV descriptors)")
+    ap.add_argument("--tokens", type=int, default=256,
+                    help="tokens per forward for --arch lowering")
+    ap.add_argument("--objective", default="latency",
+                    choices=["latency", "energy"])
+    ap.add_argument("--constraint", default="area",
+                    choices=["area", "power"])
+    ap.add_argument("--platform", default="iot",
+                    choices=["unlimited", "cloud", "iot", "iotx"])
+    ap.add_argument("--scenario", default="LP", choices=["LP", "LS"])
+    ap.add_argument("--dataflow", default="dla",
+                    choices=["dla", "eye", "shi", "mix"])
+    ap.add_argument("--levels", type=int, default=12, choices=[10, 12, 14])
+    ap.add_argument("--epochs", type=int, default=5000)
+    ap.add_argument("--episodes", type=int, default=1,
+                    help="episodes per epoch (1 = the paper's setting)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-finetune", action="store_true",
+                    help="skip the stage-2 local GA")
+    ap.add_argument("--ga-generations", type=int, default=2000)
+    ap.add_argument("--ga-population", type=int, default=20)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    if args.workload:
+        wl = workloads_lib.get_workload(args.workload)
+        target = args.workload
+    else:
+        from repro.costmodel import arch_workloads
+        wl = arch_workloads.lower_arch(args.arch, tokens=args.tokens)
+        target = args.arch
+
+    mix = args.dataflow == "mix"
+    ecfg = env_lib.EnvConfig(
+        objective=args.objective, constraint=args.constraint,
+        platform=args.platform, scenario=args.scenario,
+        dataflow=(dfl.DLA if mix
+                  else dfl.DATAFLOW_NAMES.index(args.dataflow)),
+        mix=mix, levels=args.levels)
+    rcfg = reinforce.ReinforceConfig(
+        epochs=args.epochs, episodes_per_epoch=args.episodes,
+        lr=args.lr, seed=args.seed)
+    gcfg = ga_lib.LocalGAConfig(population=args.ga_population,
+                                generations=args.ga_generations,
+                                seed=args.seed)
+
+    print(f"target={target} layers={len(wl)} macs={total_macs(wl)/1e6:.0f}M "
+          f"obj={args.objective} cstr={args.constraint}:{args.platform} "
+          f"df={args.dataflow} scenario={args.scenario}", flush=True)
+
+    res = search.confuciux_search(wl, ecfg, rcfg, gcfg,
+                                  fine_tune=not args.no_finetune)
+
+    rec = {
+        "target": target, "objective": args.objective,
+        "constraint": args.constraint, "platform": args.platform,
+        "scenario": args.scenario, "dataflow": args.dataflow,
+        "epochs": args.epochs,
+        "initial_valid_value": res.initial_valid_value,
+        "stage1_value": res.stage1_value,
+        "best_value": res.best_value,
+        "stage1_improvement_pct": (
+            100.0 * (1 - res.stage1_value / res.initial_valid_value)
+            if np.isfinite(res.initial_valid_value) else None),
+        "stage2_improvement_pct": (
+            100.0 * (1 - res.best_value / res.stage1_value)
+            if np.isfinite(res.stage1_value) else None),
+        "wall_seconds": round(res.wall_seconds, 2),
+        "assignment": {
+            "pe": np.asarray(res.pe).astype(int).tolist(),
+            "kt": np.asarray(res.kt).astype(int).tolist(),
+            "dataflow": [dfl.DATAFLOW_NAMES[int(d)] for d in res.df],
+            "layers": [l.name or f"layer{i}" for i, l in enumerate(wl)],
+        },
+    }
+    print(json.dumps({k: rec[k] for k in
+                      ("best_value", "stage1_value", "initial_valid_value",
+                       "wall_seconds")}), flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"wrote {args.out}", flush=True)
+    return 0 if np.isfinite(res.best_value) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures as config-driven JAX functions.
+
+  common -- attention / MLP / norm / RoPE primitives + sharding hooks
+  moe    -- GShard-style grouped top-k mixture-of-experts FFN
+  ssm    -- Mamba2 SSD (chunked state-space duality) blocks
+  lm     -- family assembly: dense | moe | ssm | hybrid | audio | vlm,
+            init / forward / decode / train_step / serve_step
+"""
+from repro.models import lm
+
+__all__ = ["lm"]

@@ -1,0 +1,301 @@
+"""Shared model primitives: norms, RoPE, GQA attention, MLP, embeddings.
+
+Everything is a pure function over explicit parameter pytrees; layer stacks
+carry a leading ``L`` dim and are driven by ``lax.scan`` (essential to keep
+the HLO -- and hence multi-pod compile time -- independent of depth).
+
+Sharding: model code never imports mesh machinery.  A :class:`ShardingPolicy`
+carries `with_sharding_constraint` hooks for the residual stream / attention
+internals / ffn internals; the default policy is a no-op so the same code
+runs on CPU tests and under pjit on the production mesh
+(repro/distributed/sharding.py builds the real policies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Constraint hooks applied inside model code (no-ops by default)."""
+
+    resid: Callable[[Array], Array] = lambda x: x      # (B, T, D)
+    heads: Callable[[Array], Array] = lambda x: x      # (B, T, H, hd)
+    kv_full: Callable[[Array], Array] = lambda x: x    # (B, S, Kv, hd)
+    ffn: Callable[[Array], Array] = lambda x: x        # (B, T, F)
+    experts: Callable[[Array], Array] = lambda x: x    # (..., E, C, D/F)
+    dispatch: Callable[[Array], Array] = lambda x: x   # (n, g, E*C)
+    experts_flat: Callable[[Array], Array] = lambda x: x  # (n, E*C, D/F)
+    ssm_x: Callable[[Array], Array] = lambda x: x      # (B, T, H, P)
+    logits: Callable[[Array], Array] = lambda x: x     # (B, T, V)
+    cache: Callable[[Array], Array] = lambda x: x      # (B, T, Kv, hd)
+
+
+NO_SHARDING = ShardingPolicy()
+
+
+def cast(x, dtype: str):
+    return x.astype(jnp.dtype(dtype))
+
+
+def normal(key, shape, scale=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)
+            ).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention.
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    hd, H, Kv = cfg.hd(), cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": normal(ks[0], (d, H * hd)),
+        "wk": normal(ks[1], (d, Kv * hd)),
+        "wv": normal(ks[2], (d, Kv * hd)),
+        "wo": normal(ks[3], (H * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,))
+        p["bk"] = jnp.zeros((Kv * hd,))
+        p["bv"] = jnp.zeros((Kv * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, *, use_rope=True, pol=NO_SHARDING):
+    B, T, _ = x.shape
+    hd, H, Kv = cfg.hd(), cfg.num_heads, cfg.num_kv_heads
+    q = x @ cast(p["wq"], cfg.compute_dtype)
+    k = x @ cast(p["wk"], cfg.compute_dtype)
+    v = x @ cast(p["wv"], cfg.compute_dtype)
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], cfg.compute_dtype)
+        k = k + cast(p["bk"], cfg.compute_dtype)
+        v = v + cast(p["bv"], cfg.compute_dtype)
+    q = pol.heads(q.reshape(B, T, H, hd))
+    k = k.reshape(B, T, Kv, hd)
+    v = v.reshape(B, T, Kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,T,H,hd), k: (B,S,Kv,hd) -> (B,Kv,G,T,S)."""
+    B, T, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, T, Kv, G, hd)
+    return jnp.einsum("btkgd,bskd->bkgts", qg, k) * scale
+
+
+# Sequences longer than this use the blockwise (flash-style) path: an
+# online-softmax scan over KV chunks that never materializes (T, S) scores.
+FLASH_THRESHOLD = 1024
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def blockwise_attention(q, k, v, *, causal=True, kv_chunk=KV_CHUNK):
+    """Memory-bounded attention.  q: (B,T,H,hd); k/v: (B,S,Kv,hd).
+
+    Single scan over KV chunks with the flash (m, l, acc) recurrence in f32;
+    ALL query rows advance together.  This keeps the query/output tensors in
+    whatever (batch, seq) sharding the caller established -- under SP the
+    T dim stays on 'model' and every flash step is communication-free
+    (a scan over q chunks would re-slice a sharded dim every step).  Live
+    memory is one (B, Kv, G, T, ck) score tile.
+    """
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    Kv = k.shape[2]
+    G = H // Kv
+    ck = min(kv_chunk, S)
+    pad = (-S) % ck
+    if pad:  # ragged cache lengths (e.g. 1601 vision patches): mask the tail
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    nk = (S + pad) // ck
+    scale = 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, T, Kv, G, hd).astype(jnp.float32)
+    ks = k.reshape(B, nk, ck, Kv, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nk, ck, Kv, hd).transpose(1, 0, 3, 2, 4)
+    q_pos = jnp.arange(T)
+
+    def kv_block(carry, ki_kc):
+        m, l, acc = carry
+        ki, kc, vc = ki_kc                   # (), (B,Kv,ck,hd) x2
+        s = jnp.einsum("btkgd,bksd->bkgts", qg,
+                       kc.astype(jnp.float32)) * scale  # (B,Kv,G,T,ck)
+        k_pos = ki * ck + jnp.arange(ck)
+        if causal:
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, -1e30)
+        if pad:
+            s = jnp.where(k_pos[None, :] < S, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = (acc * corr[..., None]
+               + jnp.einsum("bkgts,bksd->bkgtd", p, vc.astype(jnp.float32)))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, Kv, G, T), -1e30, jnp.float32),
+            jnp.zeros((B, Kv, G, T), jnp.float32),
+            jnp.zeros((B, Kv, G, T, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(kv_block, init, (jnp.arange(nk), ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,Kv,G,T,hd)
+    return (out.transpose(0, 3, 1, 2, 4).reshape(B, T, H * hd)
+            ).astype(q.dtype)
+
+
+def attention(p, cfg, x, positions, *, causal=True, use_rope=True,
+              pol=NO_SHARDING):
+    """Full (training / prefill) attention.  x: (B, T, D)."""
+    B, T, _ = x.shape
+    hd, H, Kv = cfg.hd(), cfg.num_heads, cfg.num_kv_heads
+    q, k, v = _project_qkv(p, cfg, x, positions, use_rope=use_rope, pol=pol)
+    # K/V must be sequence-complete per device before the chunk scan --
+    # one all-gather per layer instead of one per flash step.
+    k, v = pol.kv_full(k), pol.kv_full(v)
+    if T > FLASH_THRESHOLD:
+        o = blockwise_attention(q, k, v, causal=causal)
+    else:
+        s = _gqa_scores(q, k, 1.0 / jnp.sqrt(hd)).astype(jnp.float32)
+        if causal:
+            mask = jnp.tril(jnp.ones((T, T), bool))
+            s = jnp.where(mask, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkgts,bskd->btkgd", w, v).reshape(B, T, H * hd)
+    return pol.resid(o @ cast(p["wo"], cfg.compute_dtype))
+
+
+def cross_attention(p, cfg, x, kv_feats, *, pol=NO_SHARDING):
+    """x: (B, T, D) queries over kv_feats: (B, S, D) (no RoPE, no mask)."""
+    B, T, _ = x.shape
+    S = kv_feats.shape[1]
+    hd, H, Kv = cfg.hd(), cfg.num_heads, cfg.num_kv_heads
+    q = (x @ cast(p["wq"], cfg.compute_dtype)).reshape(B, T, H, hd)
+    k = (kv_feats @ cast(p["wk"], cfg.compute_dtype)).reshape(B, S, Kv, hd)
+    v = (kv_feats @ cast(p["wv"], cfg.compute_dtype)).reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = pol.heads(q)
+    k, v = pol.kv_full(k), pol.kv_full(v)
+    if T > FLASH_THRESHOLD:
+        o = blockwise_attention(q, k, v, causal=False)
+    else:
+        s = _gqa_scores(q, k, 1.0 / jnp.sqrt(hd)).astype(jnp.float32)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkgts,bskd->btkgd", w, v).reshape(B, T, H * hd)
+    return pol.resid(o @ cast(p["wo"], cfg.compute_dtype))
+
+
+def decode_attention_step(p, cfg, x, cache_k, cache_v, pos, *,
+                          use_rope=True, pol=NO_SHARDING):
+    """One-token attention against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, Tmax, Kv, hd); pos: () current index.
+    Returns (out (B,1,D), new_k, new_v).
+    """
+    B = x.shape[0]
+    hd, H, Kv = cfg.hd(), cfg.num_heads, cfg.num_kv_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions, use_rope=use_rope, pol=pol)
+    cache_k = pol.cache(jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1))
+    cache_v = pol.cache(jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1))
+    Tmax = cache_k.shape[1]
+    s = _gqa_scores(q, cache_k.astype(q.dtype), 1.0 / jnp.sqrt(hd))
+    s = s.astype(jnp.float32)
+    valid = (jnp.arange(Tmax) <= pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgts,bskd->btkgd", w,
+                   cache_v.astype(x.dtype)).reshape(B, 1, H * hd)
+    return pol.resid(o @ cast(p["wo"], cfg.compute_dtype)), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP.
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {"w_gate": normal(ks[0], (d, f)),
+                "w_up": normal(ks[1], (d, f)),
+                "w_down": normal(ks[2], (f, d))}
+    return {"w_up": normal(ks[0], (d, f)),
+            "w_down": normal(ks[1], (f, d))}
+
+
+def mlp(p, cfg, x, *, pol=NO_SHARDING):
+    if cfg.mlp_act == "swiglu":
+        h = (jax.nn.silu(x @ cast(p["w_gate"], cfg.compute_dtype))
+             * (x @ cast(p["w_up"], cfg.compute_dtype)))
+    else:
+        h = jax.nn.gelu(x @ cast(p["w_up"], cfg.compute_dtype))
+    h = pol.ffn(h)
+    return pol.resid(h @ cast(p["w_down"], cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding.
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": normal(k1, (cfg.vocab_size, cfg.d_model)),
+         "norm_f": jnp.ones((cfg.d_model,))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = normal(k2, (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed(p, cfg, tokens, *, pol=NO_SHARDING):
+    out = jnp.take(cast(p["tok"], cfg.compute_dtype), tokens, axis=0)
+    return pol.resid(out)
+
+
+def unembed(p, cfg, x, *, pol=NO_SHARDING):
+    x = rms_norm(x, p["norm_f"], cfg.norm_eps)
+    w = (p["tok"].T if cfg.tie_embeddings else p["unembed"])
+    return pol.logits(x @ cast(w, cfg.compute_dtype))

@@ -1,0 +1,561 @@
+"""Family assembly: init / forward / decode / train & serve steps for all
+10 assigned architectures.
+
+Families (ArchConfig.family):
+  dense   -- GQA transformer blocks (qwen3-32b, qwen1.5-0.5b, qwen2.5-3b,
+             starcoder2-3b)
+  moe     -- dense attention + grouped top-k MoE FFN (phi3.5-moe, qwen3-moe)
+  ssm     -- Mamba2 SSD blocks (mamba2-130m)
+  hybrid  -- Mamba2 groups + one *shared* attention block applied after each
+             group (zamba2-1.2b; the real model also LoRA-specializes the
+             shared block per site -- we share it verbatim, noted in
+             DESIGN.md S5)
+  audio   -- whisper-small: bidirectional encoder over precomputed frame
+             embeddings (conv frontend stubbed per the brief) + causal
+             decoder with cross-attention
+  vlm     -- llama-3.2-vision: groups of self-attn layers + one
+             cross-attention layer per group over precomputed patch
+             embeddings (vision tower stubbed per the brief)
+
+All stacks are ``lax.scan`` over stacked parameter pytrees with per-layer
+``jax.checkpoint`` (remat), so HLO size and compile time are depth-
+independent -- required for the 94-/100-layer multi-pod dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, moe, ssm
+from repro.models.common import NO_SHARDING
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+def _init_attn_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,)),
+            "attn": common.init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "mlp": common.init_mlp(k2, cfg)}
+
+
+def _init_moe_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,)),
+            "attn": common.init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "moe": moe.init_moe(k2, cfg)}
+
+
+def _init_mamba_block(key, cfg):
+    return {"ln1": jnp.ones((cfg.d_model,)),
+            "mamba": ssm.init_mamba(key, cfg)}
+
+
+def _init_cross_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,)),
+            "xattn": common.init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "mlp": common.init_mlp(k2, cfg)}
+
+
+def _attn_block(p, cfg, x, positions, *, causal=True, pol=NO_SHARDING,
+                moe_groups=None):
+    h = common.attention(p["attn"], cfg,
+                         common.rms_norm(x, p["ln1"], cfg.norm_eps),
+                         positions, causal=causal, pol=pol)
+    x = x + h
+    z = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h = moe.moe_ffn(p["moe"], cfg, z, n_groups=moe_groups, pol=pol)
+    else:
+        h = common.mlp(p["mlp"], cfg, z, pol=pol)
+    return x + h
+
+
+def _mamba_block(p, cfg, x, *, pol=NO_SHARDING):
+    return x + ssm.mamba_forward(
+        p["mamba"], cfg, common.rms_norm(x, p["ln1"], cfg.norm_eps), pol=pol)
+
+
+def _cross_block(p, cfg, x, feats, *, pol=NO_SHARDING):
+    h = common.cross_attention(
+        p["xattn"], cfg, common.rms_norm(x, p["ln1"], cfg.norm_eps), feats,
+        pol=pol)
+    x = x + h
+    h = common.mlp(p["mlp"], cfg,
+                   common.rms_norm(x, p["ln2"], cfg.norm_eps), pol=pol)
+    return x + h
+
+
+def _stack_init(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+UNROLL_STACKS = False  # set True to python-unroll layer stacks (flop-count
+#                        validation against the analytic model; see
+#                        tests/test_analytic.py -- XLA counts scan bodies once)
+
+
+def _scan_stack(stacked, body, x, remat=True):
+    """remat: True/'full' = recompute everything in bwd (min memory);
+    'dots' = save matmul outputs with no batch dims (skips re-running the
+    projections/MLP in the backward -- trades HBM for ~25% less recompute);
+    False/'none' = no rematerialization (tests / tiny models)."""
+    if remat in (True, "full"):
+        f = jax.checkpoint(body)
+    elif remat == "dots":
+        f = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        f = body
+    if UNROLL_STACKS:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            x = f(jax.tree.map(lambda l: l[i], stacked), x)
+        return x
+
+    def step(carry, lp):
+        return f(lp, carry), None
+
+    x, _ = jax.lax.scan(step, x, stacked)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+def init_params(key, cfg) -> Dict[str, Any]:
+    ke, kb, kx = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"embed": common.init_embed(ke, cfg)}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        fn = _init_moe_block if fam == "moe" else _init_attn_block
+        params["blocks"] = _stack_init(kb, cfg.num_layers,
+                                       functools.partial(fn, cfg=cfg))
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(
+            kb, cfg.num_layers, functools.partial(_init_mamba_block, cfg=cfg))
+    elif fam == "hybrid":
+        period = cfg.shared_attn_period
+        n_groups, rem = divmod(cfg.num_layers, period)
+        grp = jax.vmap(lambda k: _stack_init(
+            k, period, functools.partial(_init_mamba_block, cfg=cfg)))
+        params["groups"] = grp(jax.random.split(kb, n_groups))
+        if rem:
+            params["tail"] = _stack_init(
+                jax.random.fold_in(kb, 1), rem,
+                functools.partial(_init_mamba_block, cfg=cfg))
+        params["shared_attn"] = _init_attn_block(kx, cfg)
+    elif fam == "audio":
+        params["encoder"] = _stack_init(
+            kx, cfg.encoder_layers,
+            functools.partial(_init_attn_block, cfg=cfg))
+        params["enc_norm"] = jnp.ones((cfg.d_model,))
+        dec = jax.random.split(kb, 2)
+        params["blocks"] = _stack_init(
+            dec[0], cfg.num_layers, functools.partial(_init_attn_block,
+                                                      cfg=cfg))
+        params["cross"] = _stack_init(
+            dec[1], cfg.num_layers, functools.partial(_init_cross_block,
+                                                      cfg=cfg))
+    elif fam == "vlm":
+        period = cfg.cross_attn_period
+        n_cross = cfg.num_layers // period
+        n_self = period - 1
+        grp = jax.vmap(lambda k: _stack_init(
+            k, n_self, functools.partial(_init_attn_block, cfg=cfg)))
+        params["groups"] = grp(jax.random.split(kb, n_cross))
+        params["cross"] = _stack_init(
+            kx, n_cross, functools.partial(_init_cross_block, cfg=cfg))
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill).
+# ---------------------------------------------------------------------------
+def forward_hidden(params, cfg, tokens,
+                   aux: Optional[Dict[str, Array]] = None,
+                   *, pol=NO_SHARDING, remat=True, moe_groups=None) -> Array:
+    """Causal LM trunk.  tokens: (B, T) -> final hidden states (B, T, D).
+
+    aux carries modality-frontend stubs: {"frames": (B, S, D)} for audio,
+    {"patches": (B, S, D)} for vlm.
+    """
+    B, T = tokens.shape
+    x = common.embed(params["embed"], cfg, tokens, pol=pol)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        body = lambda lp, h: _attn_block(lp, cfg, h, positions, pol=pol,
+                                         moe_groups=moe_groups)
+        x = _scan_stack(params["blocks"], body, x, remat)
+    elif fam == "ssm":
+        body = lambda lp, h: _mamba_block(lp, cfg, h, pol=pol)
+        x = _scan_stack(params["blocks"], body, x, remat)
+    elif fam == "hybrid":
+        mam = lambda lp, h: _mamba_block(lp, cfg, h, pol=pol)
+        shared = params["shared_attn"]
+
+        def group_body(gp, h):
+            h = _scan_stack(gp, mam, h, remat)
+            return _attn_block(shared, cfg, h, positions, pol=pol)
+
+        x = _scan_stack(params["groups"], group_body, x, remat=False)
+        if "tail" in params:
+            x = _scan_stack(params["tail"], mam, x, remat)
+    elif fam == "audio":
+        feats = _encode_audio(params, cfg, aux["frames"], pol=pol,
+                              remat=remat)
+
+        def dec_body(lp, h):
+            blk, xblk = lp
+            h = _attn_block(blk, cfg, h, positions, pol=pol)
+            return _cross_block(xblk, cfg, h, feats, pol=pol)
+
+        x = _scan_stack((params["blocks"], params["cross"]), dec_body, x,
+                        remat)
+    elif fam == "vlm":
+        feats = aux["patches"].astype(jnp.dtype(cfg.compute_dtype))
+        slf = lambda lp, h: _attn_block(lp, cfg, h, positions, pol=pol)
+
+        def group_body(lp, h):
+            gp, xblk = lp
+            h = _scan_stack(gp, slf, h, remat)
+            return _cross_block(xblk, cfg, h, feats, pol=pol)
+
+        x = _scan_stack((params["groups"], params["cross"]), group_body, x,
+                        remat=False)
+    return x
+
+
+def forward(params, cfg, tokens, aux: Optional[Dict[str, Array]] = None,
+            *, pol=NO_SHARDING, remat=True, moe_groups=None) -> Array:
+    """Full-logits forward (small shapes / tests): (B, T) -> (B, T, V)."""
+    x = forward_hidden(params, cfg, tokens, aux, pol=pol, remat=remat,
+                       moe_groups=moe_groups)
+    return common.unembed(params["embed"], cfg, x, pol=pol)
+
+
+def prefill(params, cfg, tokens, aux: Optional[Dict[str, Array]] = None,
+            *, pol=NO_SHARDING, remat=True, moe_groups=None) -> Array:
+    """Prefill: process the whole prompt, emit logits for the LAST position
+    only -- the full (B, T, V) tensor is never materialized (at 32k x 152k
+    vocab it would be hundreds of GB)."""
+    x = forward_hidden(params, cfg, tokens, aux, pol=pol, remat=remat,
+                       moe_groups=moe_groups)
+    return common.unembed(params["embed"], cfg, x[:, -1:, :], pol=pol)[:, 0]
+
+
+def _encode_audio(params, cfg, frames, *, pol=NO_SHARDING, remat=True):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    B, S, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    body = lambda lp, h: _attn_block(lp, cfg, h, positions, causal=False,
+                                     pol=pol)
+    x = _scan_stack(params["encoder"], body, x, remat)
+    return common.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step).
+# ---------------------------------------------------------------------------
+class Cache(NamedTuple):
+    """Per-family decode state.
+
+    attn_k/attn_v: (L_eq, B, Tmax, Kv, hd) for attention layers (L_eq is the
+    number of attention *sites*: layers, or shared-block invocation sites for
+    hybrid).  mamba: stacked ssm.MambaCache.  cross_k/v: precomputed
+    encoder/vision cross KV (L_x, B, S, Kv, hd).  pos: () next index.
+    """
+
+    attn_k: Any = None
+    attn_v: Any = None
+    mamba: Any = None
+    cross_k: Any = None
+    cross_v: Any = None
+    pos: Any = None
+
+
+def _attn_cache_shape(cfg, sites, batch, max_len):
+    return (sites, batch, max_len, cfg.num_kv_heads, cfg.hd())
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> Cache:
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    fam = cfg.family
+    pos = jnp.zeros((), jnp.int32)
+    # NB: attn_k / attn_v must be *distinct* arrays -- aliased leaves break
+    # buffer donation in jitted decode loops (donate(a), donate(a)).
+    if fam in ("dense", "moe", "audio"):
+        sites = cfg.num_layers
+        shp = _attn_cache_shape(cfg, sites, batch, max_len)
+        return Cache(attn_k=jnp.zeros(shp, dt), attn_v=jnp.zeros(shp, dt),
+                     pos=pos)
+    if fam == "ssm":
+        mk = jax.vmap(lambda _: ssm.init_mamba_cache(cfg, batch))(
+            jnp.arange(cfg.num_layers))
+        return Cache(mamba=mk, pos=pos)
+    if fam == "hybrid":
+        period = cfg.shared_attn_period
+        n_groups, rem = divmod(cfg.num_layers, period)
+        mk = jax.vmap(lambda _: jax.vmap(
+            lambda __: ssm.init_mamba_cache(cfg, batch))(jnp.arange(period)))(
+            jnp.arange(n_groups))
+        tail = (jax.vmap(lambda _: ssm.init_mamba_cache(cfg, batch))(
+            jnp.arange(rem)) if rem else None)
+        shp = _attn_cache_shape(cfg, n_groups, batch, max_len)
+        return Cache(attn_k=jnp.zeros(shp, dt), attn_v=jnp.zeros(shp, dt),
+                     mamba={"groups": mk, "tail": tail}, pos=pos)
+    if fam == "vlm":
+        period = cfg.cross_attn_period
+        n_cross = cfg.num_layers // period
+        n_self = n_cross * (period - 1)
+        shp = _attn_cache_shape(cfg, n_self, batch, max_len)
+        return Cache(attn_k=jnp.zeros(shp, dt), attn_v=jnp.zeros(shp, dt),
+                     pos=pos)
+    raise ValueError(fam)
+
+
+def precompute_cross_kv(params, cfg, feats) -> Dict[str, Array]:
+    """Project encoder/vision features once into per-layer cross K/V."""
+    def proj(xblk):
+        B, S, _ = feats.shape
+        Kv, hd = cfg.num_kv_heads, cfg.hd()
+        k = (feats @ common.cast(xblk["xattn"]["wk"], cfg.compute_dtype)
+             ).reshape(B, S, Kv, hd)
+        v = (feats @ common.cast(xblk["xattn"]["wv"], cfg.compute_dtype)
+             ).reshape(B, S, Kv, hd)
+        if cfg.qk_norm:
+            k = common.rms_norm(k, xblk["xattn"]["k_norm"], cfg.norm_eps)
+        return k, v
+
+    return jax.vmap(proj)(params["cross"])
+
+
+def _cross_step_cached(xblk, cfg, x, k, v, *, pol=NO_SHARDING):
+    B = x.shape[0]
+    hd, H = cfg.hd(), cfg.num_heads
+    q = (x @ common.cast(xblk["xattn"]["wq"], cfg.compute_dtype)
+         ).reshape(B, 1, H, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, xblk["xattn"]["q_norm"], cfg.norm_eps)
+    s = common._gqa_scores(q, k.astype(q.dtype), 1.0 / jnp.sqrt(hd))
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgts,bskd->btkgd", w,
+                   v.astype(x.dtype)).reshape(B, 1, H * hd)
+    return o @ common.cast(xblk["xattn"]["wo"], cfg.compute_dtype)
+
+
+def decode_step(params, cfg, cache: Cache, token,
+                *, pol=NO_SHARDING) -> tuple[Array, Cache]:
+    """One decode step.  token: (B,) int32 -> (logits (B, V), new cache).
+
+    For audio/vlm the cross K/V must be present in the cache
+    (``precompute_cross_kv`` + Cache(cross_k=..., cross_v=...)).
+    """
+    B = token.shape[0]
+    pos = cache.pos
+    x = common.embed(params["embed"], cfg, token[:, None], pol=pol)
+    fam = cfg.family
+
+    def attn_site(p, h, ck, cv):
+        hn = common.rms_norm(h, p["ln1"], cfg.norm_eps)
+        out, ck, cv = common.decode_attention_step(p["attn"], cfg, hn, ck,
+                                                   cv, pos, pol=pol)
+        h = h + out
+        z = common.rms_norm(h, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            h = h + moe.moe_ffn(p["moe"], cfg, z, n_groups=1, pol=pol)
+        else:
+            h = h + common.mlp(p["mlp"], cfg, z, pol=pol)
+        return h, ck, cv
+
+    if fam in ("dense", "moe"):
+        def body(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = attn_site(lp, h, ck, cv)
+            return h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache.attn_k, cache.attn_v))
+        cache = cache._replace(attn_k=ks, attn_v=vs, pos=pos + 1)
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, mc = xs
+            hn = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            out, mc = ssm.mamba_step(lp["mamba"], cfg, hn, mc, pol=pol)
+            return h + out, mc
+
+        x, mcs = jax.lax.scan(body, x, (params["blocks"], cache.mamba))
+        cache = cache._replace(mamba=mcs, pos=pos + 1)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def mam_body(h, xs):
+            lp, mc = xs
+            hn = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            out, mc = ssm.mamba_step(lp["mamba"], cfg, hn, mc, pol=pol)
+            return h + out, mc
+
+        def group_body(h, xs):
+            gp, gmc, ck, cv = xs
+            h, gmc = jax.lax.scan(mam_body, h, (gp, gmc))
+            h, ck, cv = attn_site(shared, h, ck, cv)
+            return h, (gmc, ck, cv)
+
+        x, (gmc, ks, vs) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache.mamba["groups"], cache.attn_k,
+             cache.attn_v))
+        tail = cache.mamba["tail"]
+        if "tail" in params:
+            x, tail = jax.lax.scan(mam_body, x, (params["tail"], tail))
+        cache = cache._replace(mamba={"groups": gmc, "tail": tail},
+                               attn_k=ks, attn_v=vs, pos=pos + 1)
+    elif fam == "audio":
+        def body(h, xs):
+            (lp, xblk, ck, cv, xk, xv) = xs
+            h, ck, cv = attn_site(lp, h, ck, cv)
+            hn = common.rms_norm(h, xblk["ln1"], cfg.norm_eps)
+            h = h + _cross_step_cached(xblk, cfg, hn[:, 0], xk, xv, pol=pol)
+            h = h + common.mlp(xblk["mlp"], cfg,
+                               common.rms_norm(h, xblk["ln2"], cfg.norm_eps),
+                               pol=pol)
+            return h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], params["cross"], cache.attn_k,
+                      cache.attn_v, cache.cross_k, cache.cross_v))
+        cache = cache._replace(attn_k=ks, attn_v=vs, pos=pos + 1)
+    elif fam == "vlm":
+        period = cfg.cross_attn_period
+        n_cross = cfg.num_layers // period
+        n_self = period - 1
+        kss = cache.attn_k.reshape((n_cross, n_self) + cache.attn_k.shape[1:])
+        vss = cache.attn_v.reshape((n_cross, n_self) + cache.attn_v.shape[1:])
+
+        def self_body(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = attn_site(lp, h, ck, cv)
+            return h, (ck, cv)
+
+        def group_body(h, xs):
+            gp, xblk, ck, cv, xk, xv = xs
+            h, (ck, cv) = jax.lax.scan(self_body, h, (gp, ck, cv))
+            hn = common.rms_norm(h, xblk["ln1"], cfg.norm_eps)
+            h = h + _cross_step_cached(xblk, cfg, hn[:, 0], xk, xv, pol=pol)
+            h = h + common.mlp(xblk["mlp"], cfg,
+                               common.rms_norm(h, xblk["ln2"], cfg.norm_eps),
+                               pol=pol)
+            return h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            group_body, x, (params["groups"], params["cross"], kss, vss,
+                            cache.cross_k, cache.cross_v))
+        cache = cache._replace(
+            attn_k=ks.reshape(cache.attn_k.shape),
+            attn_v=vs.reshape(cache.attn_v.shape), pos=pos + 1)
+    else:
+        raise ValueError(fam)
+
+    logits = common.unembed(params["embed"], cfg, x, pol=pol)
+    return logits[:, 0, :], cache
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps.
+# ---------------------------------------------------------------------------
+CE_CHUNK = 512  # sequence positions per chunked-cross-entropy step
+
+
+def lm_loss(params, cfg, tokens, labels, aux=None, *, pol=NO_SHARDING,
+            moe_groups=None, remat=True):
+    """Next-token CE with *chunked* unembedding: logits are produced and
+    consumed CE_CHUNK positions at a time under a seq-chunk scan, so the
+    (B, T, V) tensor never exists (train_4k x 152k vocab would be ~0.6 PB
+    in f32 across the job).  Remat recomputes chunks in the backward."""
+    x = forward_hidden(params, cfg, tokens, aux, pol=pol,
+                       moe_groups=moe_groups, remat=remat)
+    B, T, D = x.shape
+    ck = min(CE_CHUNK, T)
+    while T % ck:
+        ck -= 1
+    xc = x.reshape(B, T // ck, ck, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, T // ck, ck).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(carry, xs):
+        xchunk, lchunk = xs
+        logits = common.unembed(params["embed"], cfg, xchunk,
+                                pol=pol).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lchunk[..., None], axis=-1)[..., 0]
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(chunk_nll, jnp.float32(0.0), (xc, lc))
+    return total / (B * T)
+
+
+def train_step(params, opt_state, batch, cfg, optimizer, *,
+               pol=NO_SHARDING, moe_groups=None, remat=True):
+    """One optimizer step.  batch: {"tokens": (B,T), "labels": (B,T), ...}."""
+    aux = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    loss, grads = jax.value_and_grad(lm_loss)(
+        params, cfg, batch["tokens"], batch["labels"], aux or None, pol=pol,
+        moe_groups=moe_groups, remat=remat)
+    params, opt_state = optimizer.update(grads, opt_state, params)
+    return params, opt_state, loss
+
+
+def train_step_accum(params, opt_state, batch, cfg, optimizer, *,
+                     n_micro: int = 1, pol=NO_SHARDING, moe_groups=None):
+    """One optimizer step with gradient accumulation over n_micro slices.
+
+    The global batch is split along axis 0 and scanned; XLA schedules the
+    gradient all-reduce of microbatch *i* to overlap the compute of *i+1*
+    (the accumulation add is the reduction consumer inside the loop body).
+    ``n_micro == 1`` reduces to :func:`train_step` exactly.
+    """
+    if n_micro == 1:
+        return train_step(params, opt_state, batch, cfg, optimizer, pol=pol,
+                          moe_groups=moe_groups)
+    B = batch["tokens"].shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    micro = jax.tree.map(
+        lambda x: x.reshape((n_micro, B // n_micro) + x.shape[1:]), batch)
+
+    def one_micro(carry, mb):
+        loss_acc, grad_acc = carry
+        aux = {k: v for k, v in mb.items() if k not in ("tokens", "labels")}
+        loss, grads = jax.value_and_grad(lm_loss)(
+            params, cfg, mb["tokens"], mb["labels"], aux or None, pol=pol,
+            moe_groups=moe_groups)
+        return (loss_acc + loss,
+                jax.tree.map(jnp.add, grad_acc, grads)), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(one_micro, (jnp.float32(0.0), zero),
+                                    micro)
+    grads = jax.tree.map(lambda g: g / n_micro, grads)
+    params, opt_state = optimizer.update(grads, opt_state, params)
+    return params, opt_state, loss / n_micro
+
+
+def serve_step(params, cache: Cache, token, cfg, *, pol=NO_SHARDING):
+    """One batched greedy decode step: (B,) token ids -> (B,) next ids."""
+    logits, cache = decode_step(params, cfg, cache, token, pol=pol)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache

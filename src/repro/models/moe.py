@@ -1,0 +1,109 @@
+"""GShard-style grouped top-k mixture-of-experts FFN.
+
+Dispatch strategy (see DESIGN.md S6): tokens are reshaped into ``n_groups``
+groups of ``g`` tokens (one group per data shard on the production mesh);
+routing, capacity and the dispatch/combine einsums are per-group.  This keeps
+the dispatch-einsum FLOPs at ``n_groups * g * E * C * D`` with
+``C = g*k/E*cf`` -- quadratic in the *group* size, not the global batch --
+which is the GShard trade-off and a hillclimb lever in EXPERIMENTS.md SPerf.
+
+Expert weights are stacked (E, D, F) and shard over the ``model`` axis (EP);
+the dispatched activations (groups, E, C, D) shard groups->data, E->model,
+so GSPMD lowers the group->expert exchange to an all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import NO_SHARDING, cast, normal
+
+
+def init_moe(key, cfg):
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {"router": normal(ks[0], (d, E))}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = normal(ks[1], (E, d, f))
+        p["w_up"] = normal(ks[2], (E, d, f))
+        p["w_down"] = normal(ks[3], (E, f, d))
+    else:
+        p["w_up"] = normal(ks[1], (E, d, f))
+        p["w_down"] = normal(ks[2], (E, f, d))
+    return p
+
+
+def capacity(g: int, cfg) -> int:
+    c = int(g * cfg.experts_per_token / cfg.num_experts
+            * cfg.moe_capacity_factor)
+    return max(c, cfg.experts_per_token)
+
+
+def moe_ffn(p, cfg, x, *, n_groups: Optional[int] = None, pol=NO_SHARDING):
+    """x: (B, T, D) -> (B, T, D).  Top-k routing with per-group capacity."""
+    B, T, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    N = B * T
+    # Default group size 512: the (g, E*C) dispatch one-hot and its einsum
+    # scale as N*g*k*cf, so small groups keep dispatch overhead ~5-10% of
+    # expert FLOPs (SPerf lever; see module docstring).
+    n_groups = n_groups or max(1, N // 512)
+    while N % n_groups:
+        n_groups -= 1
+    g = N // n_groups
+    C = capacity(g, cfg)
+
+    xf = x.reshape(n_groups, g, D)
+    logits = (xf @ cast(p["router"], cfg.compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)            # (n, g, E)
+    top_p, top_e = jax.lax.top_k(probs, k)             # (n, g, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)      # (n, g, k, E)
+    flat = onehot.reshape(n_groups, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # (n, g*k, E)
+    pos = (pos * flat).sum(-1).reshape(n_groups, g, k)      # (n, g, k)
+    keep = pos < C
+    weight = jnp.where(keep, top_p, 0.0)
+
+    # dispatch: (n, g, k, E, C) one-hot -> folded to (n, g, E*C).  The E*C
+    # dim is constrained onto the EP ('model') axis *before* the einsums so
+    # GSPMD lowers group->expert movement as an all-to-all instead of
+    # replicate+slice (the "involuntary full remat" path).
+    disp = (jax.nn.one_hot(top_e * C + pos, E * C, dtype=x.dtype)
+            * weight[..., None].astype(x.dtype)).sum(axis=2)  # (n, g, E*C)
+    disp = pol.dispatch(disp)
+    xe = jnp.einsum("ngc,ngd->ncd", disp, xf)                 # (n, E*C, D)
+    xe = pol.experts_flat(xe)
+    xe = pol.experts(xe.reshape(n_groups, E, C, D))
+
+    if cfg.mlp_act == "swiglu":
+        h = (jax.nn.silu(jnp.einsum("necd,edf->necf", xe,
+                                    cast(p["w_gate"], cfg.compute_dtype)))
+             * jnp.einsum("necd,edf->necf", xe,
+                          cast(p["w_up"], cfg.compute_dtype)))
+    else:
+        h = jax.nn.gelu(jnp.einsum("necd,edf->necf", xe,
+                                   cast(p["w_up"], cfg.compute_dtype)))
+    ye = jnp.einsum("necf,efd->necd", h, cast(p["w_down"],
+                                              cfg.compute_dtype))
+    ye = pol.experts_flat(pol.experts(ye).reshape(n_groups, E * C, D))
+    y = jnp.einsum("ngc,ncd->ngd", disp, ye)                  # combine
+    return pol.resid(y.reshape(B, T, D))
+
+
+def aux_load_balance_loss(p, cfg, x):
+    """Switch-style load-balance auxiliary loss (fraction * probability)."""
+    logits = (x @ cast(p["router"], cfg.compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E, k = cfg.num_experts, cfg.experts_per_token
+    top_e = jax.lax.top_k(probs, k)[1]
+    frac = jax.nn.one_hot(top_e, E).sum(axis=(-3, -2)) / (
+        probs.shape[-2] * k)
+    mean_p = probs.mean(axis=-2)
+    return E * jnp.sum(frac.reshape(-1, E).mean(0)
+                       * mean_p.reshape(-1, E).mean(0))

@@ -1,0 +1,178 @@
+"""Mamba2 blocks via SSD (state-space duality), arXiv:2405.21060.
+
+The SSD recurrence per head h (scalar decay a_t = exp(dt_t * A_h)):
+
+    S_t = a_t * S_{t-1} + dt_t * (B_t (x) x_t)        S: (P, S) per head
+    y_t = C_t . S_t + D_h * x_t
+
+Training/prefill uses the *chunked* algorithm: the sequence is split into
+chunks of Q tokens; within a chunk the contribution is a masked
+(attention-like) matmul -- MXU-friendly -- and chunk boundary states are
+carried by a short ``lax.scan`` (T/Q steps).  This is exactly the paper's
+"quadratic within / linear across" duality and is why the mamba archs keep
+the long_500k shape (DESIGN.md SArch-applicability).
+
+Decode is the O(1)-per-token recurrence on a persistent (H, P, S) state plus
+a (width-1)-deep causal-conv tail.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NO_SHARDING, cast, normal, rms_norm
+
+CONV_WIDTH = 4
+
+
+def dims(cfg) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state S)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    return d_inner, d_inner // P, P, cfg.ssm_state
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_inner, H, P, S = dims(cfg)
+    G = 1  # mamba2 default: single B/C group shared across heads
+    conv_ch = d_inner + 2 * G * S
+    proj_out = 2 * d_inner + 2 * G * S + H
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal(ks[0], (d, proj_out)),
+        "conv_w": normal(ks[1], (CONV_WIDTH, conv_ch), scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.full((H,), jnp.log(jnp.expm1(0.01))),
+        "gate_norm": jnp.ones((d_inner,)),
+        "out_proj": normal(ks[2], (d_inner, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depth-wise causal conv.  x: (B, T, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :]
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, H, P, S = dims(cfg)
+    G = 1
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, d_inner + d_inner + 2 * G * S], axis=-1)
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """x: (B,T,H,P), dt: (B,T,H), A: (H,), Bm/Cm: (B,T,S).  -> (B,T,H,P)."""
+    B_, T, H, P = x.shape
+    S = Bm.shape[-1]
+    Q = min(chunk, T)
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+    xc = x.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, S)
+    Cc = Cm.reshape(B_, nc, Q, S)
+
+    a = dtc * A[None, None, None, :]                  # (B,nc,Q,H) log decay
+    cum = jnp.cumsum(a, axis=2)
+
+    # Intra-chunk (the "quadratic" branch): masked decay-weighted scores.
+    CB = jnp.einsum("bnqs,bnks->bnqk", Cc, Bc)        # (B,nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    Wt = (CB[..., None] * decay
+          * dtc[:, :, None, :, :])                    # (B,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Wt = jnp.where(mask[None, None, :, :, None], Wt, 0.0)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", Wt, xc)
+
+    # Chunk-boundary states (the "linear" branch).
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,nc,Q,H)
+    Sc = jnp.einsum("bnqh,bnqs,bnqhp->bnhps", decay_to_end * dtc, Bc, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B,nc,H)
+
+    def scan_fn(Sprev, inp):
+        dec, Snew = inp
+        return Sprev * dec[:, :, None, None] + Snew, Sprev
+
+    S0 = jnp.zeros((B_, H, P, S), x.dtype)
+    _, Sprevs = jax.lax.scan(
+        scan_fn, S0,
+        (chunk_decay.transpose(1, 0, 2), Sc.transpose(1, 0, 2, 3, 4)))
+    Sprev = Sprevs.transpose(1, 0, 2, 3, 4)           # state entering chunk
+    y_inter = jnp.einsum("bnqs,bnhps,bnqh->bnqhp", Cc, Sprev, jnp.exp(cum))
+    return (y_intra + y_inter).reshape(B_, T, H, P)
+
+
+def mamba_forward(p, cfg, x, *, pol=NO_SHARDING):
+    """Full-sequence Mamba2 block.  x: (B, T, D) -> (B, T, D)."""
+    B, T, D = x.shape
+    d_inner, H, P, S = dims(cfg)
+    zxbcdt = x @ cast(p["in_proj"], cfg.compute_dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, cast(p["conv_w"], cfg.compute_dtype),
+                                   cast(p["conv_b"], cfg.compute_dtype)))
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + S], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    # The SSD chunk scan is sequential in T: the sequence must be complete
+    # per device (heads shard over 'model' instead, when divisible).
+    xh = pol.ssm_x(xs.reshape(B, T, H, P))
+    y = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                    Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                    cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return pol.resid(y @ cast(p["out_proj"], cfg.compute_dtype))
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # (B, CONV_WIDTH-1, conv_ch) trailing conv inputs
+    ssm: jnp.ndarray    # (B, H, P, S) recurrent state
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> MambaCache:
+    d_inner, H, P, S = dims(cfg)
+    conv_ch = d_inner + 2 * S
+    return MambaCache(
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, H, P, S), dtype))
+
+
+def mamba_step(p, cfg, x, cache: MambaCache, *, pol=NO_SHARDING):
+    """One-token Mamba2 step.  x: (B, 1, D) -> (B, 1, D), new cache."""
+    B = x.shape[0]
+    d_inner, H, P, S = dims(cfg)
+    zxbcdt = x[:, 0] @ cast(p["in_proj"], cfg.compute_dtype)  # (B, .)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    # Causal conv over (stored tail + current input).
+    hist = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)
+    w = cast(p["conv_w"], cfg.compute_dtype)
+    conv_out = (hist * w[None]).sum(axis=1) + cast(p["conv_b"],
+                                                   cfg.compute_dtype)
+    xbc_c = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xbc_c, [d_inner, d_inner + S], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                      # (B, H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bs,bhp->bhps", dt, Bm.astype(jnp.float32), xh)
+    ssm = cache.ssm * a[:, :, None, None] + dBx
+    y = jnp.einsum("bs,bhps->bhp", Cm.astype(jnp.float32), ssm)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ cast(p["out_proj"], cfg.compute_dtype))[:, None, :]
+    new_cache = MambaCache(conv=hist[:, 1:, :], ssm=ssm)
+    return pol.resid(out), new_cache

@@ -1,0 +1,91 @@
+"""Pure-JAX optimizers over arbitrary pytrees (no optax in this environment).
+
+Adam / AdamW / SGD with the usual bias correction, plus global-norm clipping
+and simple LR schedules.  State is a pytree of the same structure as params,
+so it checkpoints and re-shards like any other model state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray   # ()
+    mu: Any             # first moment (pytree like params)
+    nu: Any             # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam/AdamW.  ``lr`` may be a float or a step -> lr schedule fn."""
+
+    lr: Any = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+
+    def init(self, params) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros,
+                        jax.tree.map(lambda p: jnp.zeros_like(p), params))
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2)
+                                                   + self.eps)
+                                      + self.weight_decay * p),
+            params, mu, nu)
+        return new_params, OptState(step, mu, nu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Any = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        mu = jax.tree.map(lambda m, g: self.momentum * m + g,
+                          state.mu, grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new_params, OptState(step, mu, state.nu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (base_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- tests see the real single
+CPU device; multi-device behaviour is tested via subprocesses
+(tests/test_distributed.py) and the dry-run launcher owns its own flags."""
+import dataclasses
+
+import pytest
+
+
+@pytest.fixture
+def f32(request):
+    return None
+
+
+def f32_cfg(cfg):
+    """Run smoke configs in f32 on CPU (bf16 matmuls are slow + noisy)."""
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32")

@@ -1,0 +1,147 @@
+"""Cost model (Env) behaviour: the landscape structure the paper relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.costmodel import (CONV, DLA, EYE, GEMM, KT_LEVELS, PE_LEVELS, SHI,
+                             evaluate, layers_to_array, model_cost, workloads)
+from repro.costmodel.layers import LayerSpec, total_macs
+
+
+def test_known_mac_counts():
+    """MobileNet-V2 ~300M MACs, ResNet-50 ~3.8G (published numbers)."""
+    assert abs(total_macs(workloads.mobilenet_v2()) / 300e6 - 1) < 0.15
+    assert abs(total_macs(workloads.resnet50()) / 3.8e9 - 1) < 0.15
+
+
+def test_workload_registry_covers_paper_and_archs():
+    names = workloads.workload_names()
+    for n in ("mobilenet_v2", "resnet50", "mnasnet", "gnmt", "transformer",
+              "ncf", "qwen3_32b", "mamba2_130m", "zamba2_1p2b"):
+        assert n in names
+    wl = workloads.get_workload("qwen3_32b", tokens=256)
+    assert len(wl) > 3 and total_macs(wl) > 0
+
+
+def test_pe_overprovision_plateau():
+    """Latency flattens once PEs exceed available parallelism (Fig. 5)."""
+    small = LayerSpec.conv(16, 16, 14, 14, 3, 3).as_row()
+    lats = [float(evaluate(small, p, 4.0, DLA).latency) for p in PE_LEVELS]
+    assert lats[-1] == pytest.approx(lats[-2], rel=0.01)
+    assert lats[0] > 10 * lats[-1]  # and parallelism does help before that
+
+
+def test_buffer_overprovision_plateau():
+    """Once kt >= K_out the latency is exactly flat (Fig. 5 plateau): a
+    bigger L1 only costs area/power.  BELOW the plateau latency is genuinely
+    non-monotone in the tile size -- the paper's own Fig. 5 shows this
+    ("two separate purple regions", Layer-34) and the tile size IS the
+    action, so quantization effects are faithful landscape structure."""
+    K = 32
+    l = LayerSpec.conv(K, 64, 28, 28, 3, 3).as_row()
+    for df in (DLA, EYE, SHI):
+        on_plateau = [float(evaluate(l, 16.0, float(k), df).latency)
+                      for k in (K, K + 3, K + 40)]
+        assert on_plateau[0] == on_plateau[1] == on_plateau[2]
+        areas = [float(evaluate(l, 16.0, float(k), df).area)
+                 for k in (K, K + 3, K + 40)]
+        assert areas[0] < areas[1] < areas[2]
+        # Below the plateau the landscape is rich: multiple distinct values.
+        lats = [float(evaluate(l, 16.0, float(k), df).latency)
+                for k in KT_LEVELS]
+        assert len(set(lats)) > 1
+
+
+def test_dwconv_kt_indifference_dla():
+    """Paper Layer-23: DWCONV gains nothing from bigger tiles under dla."""
+    dw = LayerSpec.dwconv(192, 28, 28, 3, 3).as_row()
+    lats = [float(evaluate(dw, 32.0, k, DLA).latency) for k in KT_LEVELS[:6]]
+    assert max(lats) / min(lats) < 1.05
+
+
+def test_latency_not_monotone_in_pe():
+    """More PEs can hurt (refetch/bandwidth terms) -- Fig. 4 discussion."""
+    arr = layers_to_array(workloads.mobilenet_v2())
+    found = False
+    for i in range(0, arr.shape[0], 5):
+        lat = np.array([[float(evaluate(arr[i], p, k, DLA).latency)
+                         for k in KT_LEVELS] for p in PE_LEVELS])
+        if (np.diff(lat, axis=0) > 1e-3).any():
+            found = True
+            break
+    assert found
+
+
+def test_energy_latency_distinct_optima():
+    arr = layers_to_array(workloads.mobilenet_v2())
+    l = arr[12]
+    en = np.array([[float(evaluate(l, p, k, DLA).energy)
+                    for k in KT_LEVELS] for p in PE_LEVELS])
+    lat = np.array([[float(evaluate(l, p, k, DLA).latency)
+                     for k in KT_LEVELS] for p in PE_LEVELS])
+    assert en.max() / en.min() > 3      # rich landscape (Fig. 4)
+    assert lat.max() / lat.min() > 10
+
+
+@settings(max_examples=30, deadline=None)
+@given(K=st.integers(1, 512), C=st.integers(1, 512),
+       Y=st.integers(3, 64), R=st.sampled_from([1, 3, 5, 7]),
+       pe=st.integers(1, 160), kt=st.integers(1, 16),
+       df=st.sampled_from([DLA, EYE, SHI]))
+def test_cost_invariants(K, C, Y, R, pe, kt, df):
+    """Positive finite costs; area/power monotone in pe and kt."""
+    l = LayerSpec.conv(K, C, max(Y, R), max(Y, R), R, R).as_row()
+    out = evaluate(l, float(pe), float(kt), df)
+    for v in (out.latency, out.energy, out.area, out.power):
+        assert np.isfinite(float(v)) and float(v) > 0
+    out2 = evaluate(l, float(pe + 8), float(kt), df)
+    assert float(out2.area) > float(out.area)
+    assert float(out2.power) > float(out.power)
+    out3 = evaluate(l, float(pe), float(kt + 2), df)
+    assert float(out3.area) > float(out.area)
+    # once the tile covers every output channel, latency plateaus exactly
+    p1 = evaluate(l, float(pe), float(K), df)
+    p2 = evaluate(l, float(pe), float(K + 5), df)
+    assert float(p1.latency) == float(p2.latency)
+
+
+@settings(max_examples=20, deadline=None)
+@given(M=st.integers(1, 2048), N=st.integers(1, 2048), Kg=st.integers(1, 2048))
+def test_gemm_macs(M, N, Kg):
+    l = LayerSpec.gemm(M, N, Kg)
+    assert l.macs() == M * N * Kg
+
+
+def test_lp_vs_ls_aggregation():
+    arr = layers_to_array(workloads.ncf())
+    N = arr.shape[0]
+    pe = jnp.full((N,), 16.0)
+    kt = jnp.full((N,), 4.0)
+    lp = model_cost(arr, pe, kt, DLA, "LP")
+    ls = model_cost(arr, pe, kt, DLA, "LS")
+    assert float(lp.latency) == pytest.approx(float(ls.latency), rel=1e-6)
+    assert float(lp.area) > float(ls.area)  # LP sums partitions; LS shares
+
+
+def test_batched_broadcasting():
+    arr = layers_to_array(workloads.ncf())
+    B, N = 4, arr.shape[0]
+    pe = jnp.ones((B, N)) * 8
+    out = evaluate(arr[None], pe, 4.0, DLA)
+    assert out.latency.shape == (B, N)
+    # row 0 equals unbatched
+    single = evaluate(arr, pe[0], 4.0, DLA)
+    np.testing.assert_allclose(out.latency[0], single.latency, rtol=1e-6)
+
+
+def test_repeat_scales_all_costs():
+    a = LayerSpec.gemm(64, 64, 64, repeat=1).as_row()
+    b = LayerSpec.gemm(64, 64, 64, repeat=3).as_row()
+    oa = evaluate(a, 8.0, 4.0, DLA)
+    ob = evaluate(b, 8.0, 4.0, DLA)
+    for fa, fb in [(oa.latency, ob.latency), (oa.energy, ob.energy),
+                   (oa.area, ob.area), (oa.power, ob.power)]:
+        assert float(fb) == pytest.approx(3 * float(fa), rel=1e-5)

@@ -1,0 +1,60 @@
+"""Data pipeline determinism + shapes (the restart/elasticity contract)."""
+import numpy as np
+
+from repro.training import data
+
+
+def _cfg(**kw):
+    base = dict(seq_len=32, global_batch=8, vocab_size=128)
+    base.update(kw)
+    return data.DataConfig(**base)
+
+
+def test_synthetic_deterministic():
+    ds1 = data.make_dataset(_cfg())
+    ds2 = data.make_dataset(_cfg())
+    for step in (0, 1, 17):
+        a = ds1.batch(step)
+        b = ds2.batch(step)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(ds1.batch(0)["tokens"],
+                              ds1.batch(1)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    ds = data.make_dataset(_cfg())
+    b = ds.batch(0)
+    assert b["tokens"].shape == (8, 32) and b["labels"].shape == (8, 32)
+    # labels[t] continues tokens: label[:, :-1] == tokens[:, 1:]
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_sharded_batches_partition():
+    ds = data.make_dataset(_cfg())
+    full_shapes = [ds.batch(5, shard=i, n_shards=4)["tokens"].shape
+                   for i in range(4)]
+    assert all(s == (2, 32) for s in full_shapes)
+    # different shards see different data at the same step
+    a = ds.batch(5, shard=0, n_shards=4)["tokens"]
+    b = ds.batch(5, shard=1, n_shards=4)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+def test_synthetic_learnable_structure():
+    """Bigram structure exists: next-token entropy < uniform."""
+    ds = data.make_dataset(_cfg(seq_len=256, global_batch=16))
+    b = ds.batch(0)
+    toks, labs = b["tokens"].ravel(), b["labels"].ravel()
+    # count how often the label is one of the 4 bigram successors
+    hits = np.mean([l in ds._next[t] for t, l in zip(toks, labs)])
+    assert hits > 0.5
+
+
+def test_memmap_roundtrip(tmp_path):
+    path = str(tmp_path / "tokens.bin")
+    data.write_token_file(path, 10_000, 128, seed=1)
+    ds = data.make_dataset(_cfg(source="memmap", path=path))
+    a = ds.batch(3)
+    b = ds.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < 128

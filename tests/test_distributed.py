@@ -1,0 +1,141 @@
+"""Multi-device behaviour via subprocesses (the main process keeps 1 CPU
+device; --xla_force_host_platform_device_count must be set before jax init).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_distributed_search_converges():
+    out = run_with_devices("""
+import jax, numpy as np
+from repro.core import env as env_lib, reinforce
+from repro.distributed import dist_search
+from repro.costmodel.layers import LayerSpec
+wl = [LayerSpec.conv(32,16,28,28,3,3), LayerSpec.dwconv(64,14,14,3,3),
+      LayerSpec.gemm(64,256,128)]
+mesh = jax.make_mesh((4,2), ("data","model"))
+state, hist = dist_search.run_distributed_search(
+    wl, env_lib.EnvConfig(platform="iot"), mesh,
+    reinforce.ReinforceConfig(epochs=80, lr=3e-3),
+    dist_search.DistConfig(episodes_per_device=2))
+assert np.isfinite(float(state.best_value)), hist["best_value"][-5:]
+first = hist["best_value"][np.isfinite(hist["best_value"])][0]
+assert float(state.best_value) <= first
+print("OK", float(state.best_value))
+""")
+    assert "OK" in out
+
+
+def test_straggler_masking_preserves_convergence():
+    out = run_with_devices("""
+import jax, numpy as np
+from repro.core import env as env_lib, reinforce
+from repro.distributed import dist_search
+from repro.costmodel.layers import LayerSpec
+wl = [LayerSpec.conv(32,16,28,28,3,3), LayerSpec.gemm(64,256,128)]
+mesh = jax.make_mesh((4,2), ("data","model"))
+mask = np.ones(8, bool); mask[[2,6]] = False
+state, hist = dist_search.run_distributed_search(
+    wl, env_lib.EnvConfig(platform="iot"), mesh,
+    reinforce.ReinforceConfig(epochs=80, lr=3e-3),
+    dist_search.DistConfig(episodes_per_device=2), straggler_mask=mask)
+assert np.isfinite(float(state.best_value))
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_int8_psum_error_bound():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.distributed.dist_search import psum_int8
+mesh = jax.make_mesh((8,), ("pod",))
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+def f(xs):
+    local = xs[0]
+    exact = jax.lax.psum(local, "pod")
+    approx = psum_int8(local, "pod")
+    return exact[None], approx[None]
+exact, approx = shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                          out_specs=P("pod", None))(x)
+err = float(jnp.abs(exact - approx).max())
+scale = float(jnp.abs(x).max()) / 127.0
+assert err <= 8 * scale * 0.51 + 1e-6, (err, scale)  # n * scale/2 bound
+print("OK", err)
+""")
+    assert "OK" in out
+
+
+def test_int8_compressed_pod_reduction_converges():
+    out = run_with_devices("""
+import jax, numpy as np
+from repro.core import env as env_lib, reinforce
+from repro.distributed import dist_search
+from repro.costmodel.layers import LayerSpec
+wl = [LayerSpec.conv(32,16,28,28,3,3), LayerSpec.gemm(64,256,128)]
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"))
+state, hist = dist_search.run_distributed_search(
+    wl, env_lib.EnvConfig(platform="iot"), mesh,
+    reinforce.ReinforceConfig(epochs=80, lr=3e-3),
+    dist_search.DistConfig(episodes_per_device=2, compress_pod_axis=True))
+assert np.isfinite(float(state.best_value))
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """pjit train step on a (2,2) mesh == unsharded result."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np, dataclasses, functools
+from repro import configs
+from repro.models import lm
+from repro.training import optim
+from repro.distributed import sharding
+cfg = dataclasses.replace(configs.get_smoke("qwen1p5_0p5b"),
+                          param_dtype="float32", compute_dtype="float32")
+opt = optim.Adam(lr=1e-3)
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+ost = opt.init(params)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+batch = {"tokens": tokens, "labels": tokens}
+step = functools.partial(lm.train_step, cfg=cfg, optimizer=opt)
+p1, o1, l1 = jax.jit(step)(params, ost, batch)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+psh = sharding.tree_shardings(mesh, params)
+params_s = jax.device_put(params, psh)
+ost_s = jax.device_put(ost, sharding.tree_shardings(mesh, ost))
+batch_s = {k: jax.device_put(v, sharding.batch_sharding(mesh, 4))
+           for k, v in batch.items()}
+pol = sharding.make_policy(mesh, batch=4, kind="train")
+step_s = functools.partial(lm.train_step, cfg=cfg, optimizer=opt, pol=pol)
+with mesh:
+    p2, o2, l2 = jax.jit(step_s)(params_s, ost_s, batch_s)
+assert abs(float(l1) - float(l2)) < 1e-4, (float(l1), float(l2))
+# Adam update with lr=1e-3: reduction-order f32 noise in grads moves params
+# by O(lr * eps_rel); 5e-4 = half an optimizer step of slack.
+d = max(jax.tree.leaves(jax.tree.map(
+    lambda a, b: float(jnp.abs(a - np.asarray(b)).max()), p1, p2)))
+assert d < 5e-4, d
+print("OK", float(l1), d)
+""")
+    assert "OK" in out

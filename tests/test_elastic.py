@@ -1,0 +1,19 @@
+"""Elastic restart: shrink + grow the mesh mid-training; the deterministic
+data pipeline + resharding checkpoints must reproduce the uninterrupted
+loss trajectory (examples/elastic_restart.py as a test)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_elastic_restart_matches_uninterrupted():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples",
+                                      "elastic_restart.py")],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+    assert "ELASTIC RESTART OK" in out.stdout

@@ -1,0 +1,72 @@
+"""HLO parsing: collective byte accounting + while-trip scaling."""
+import pytest
+
+from repro.distributed import hlo_analysis as H
+
+SYNTH = """\
+HloModule test
+
+%wide.body_spmd (wide.param: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %ag.1 = f32[8,64]{1,0} all-gather(%x), dimensions={1}
+  %inner = (s32[], f32[4]) while(%t), condition=%inner.cond, body=%inner.body
+  ROOT %r = (s32[], f32[8,16]) tuple(%i, %y)
+}
+
+%inner.body (p0: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %q = (s32[], f32[4]) parameter(0)
+  %ar.2 = f32[4]{0} all-reduce(%z), to_apply=%add
+  ROOT %r2 = (s32[], f32[4]) tuple(%j, %w)
+}
+
+%inner.cond (p1: (s32[], f32[4])) -> pred[] {
+  %iv = s32[] get-tuple-element(%p1), index=0
+  %limit = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%iv, %limit), direction=LT
+}
+
+%wide.cond_spmd (wp: (s32[], f32[8,16])) -> pred[] {
+  %iv2 = s32[] get-tuple-element(%wp), index=0
+  %lim2 = s32[] constant(12)
+  ROOT %c2 = pred[] compare(%iv2, %lim2), direction=LT
+}
+
+ENTRY %main_spmd (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %ar.0 = f32[8,16]{1,0} all-reduce(%a), to_apply=%add
+  %loop = (s32[], f32[8,16]) while(%init), condition=%wide.cond_spmd, body=%wide.body_spmd
+  ROOT %out = f32[8,16] get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert H._shape_bytes("(bf16[2,4], s32[3])") == 2 * 4 * 2 + 3 * 4
+    assert H._shape_bytes("pred[]") == 1
+
+
+def test_multipliers_nested():
+    mult = H.computation_multipliers(SYNTH)
+    assert mult["wide.body_spmd"] == 12
+    assert mult["inner.body"] == 12 * 5
+
+
+def test_collective_scaling():
+    raw = H.collective_stats(SYNTH, scale_loops=False)
+    scaled = H.collective_stats(SYNTH)
+    # entry all-reduce 8*16*4; inner all-reduce 4*4 (x60); ag 8*64*4 (x12)
+    assert raw["all-reduce"] == 8 * 16 * 4 + 4 * 4
+    assert scaled["all-reduce"] == 8 * 16 * 4 + 4 * 4 * 60
+    assert scaled["all-gather"] == 8 * 64 * 4 * 12
+    assert scaled["total_wire_bytes"] == pytest.approx(
+        2 * scaled["all-reduce"] + scaled["all-gather"])
+
+
+def test_roofline_terms():
+    t = H.roofline_terms(197e12, 819e9, 50e9)
+    assert t["t_compute"] == pytest.approx(1.0)
+    assert t["t_memory"] == pytest.approx(1.0)
+    assert t["t_collective"] == pytest.approx(1.0)
+    t2 = H.roofline_terms(1e12, 819e9 * 10, 0)
+    assert t2["bottleneck"] == "t_memory"

@@ -1,0 +1,58 @@
+"""Pipeline parallelism: the GPipe shard_map schedule must match the plain
+train step exactly (loss + params after one optimizer step)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n: int = 4, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pp_matches_reference():
+    out = _run("""
+import dataclasses, functools
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.models import lm
+from repro.training import optim
+from repro.distributed import pipeline, sharding
+
+cfg = dataclasses.replace(configs.get_smoke("qwen3_32b"),
+                          param_dtype="float32", compute_dtype="float32",
+                          num_layers=4)
+opt = optim.Adam(lr=1e-3)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+params, opt_state = pipeline.init_pp(jax.random.PRNGKey(0), cfg, opt)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                            cfg.vocab_size)
+batch = {"tokens": tokens, "labels": tokens}
+
+ref = {"embed": params["embed"], "blocks": params["blocks"]}
+p1, _, l1 = jax.jit(functools.partial(lm.train_step, cfg=cfg,
+                                      optimizer=opt))(ref, opt.init(ref),
+                                                      batch)
+for M in (1, 2, 4):
+    step = pipeline.make_pp_train_step(cfg, opt, mesh, n_micro=M)
+    psh, osh = pipeline.pp_shardings(mesh, params, opt_state)
+    bsh = sharding.batch_sharding(mesh, 8)
+    with mesh:
+        p2, _, l2 = jax.jit(step)(
+            jax.device_put(params, psh), jax.device_put(opt_state, osh),
+            {k: jax.device_put(v, bsh) for k, v in batch.items()})
+    assert abs(float(l1) - float(l2)) < 2e-4, (M, float(l1), float(l2))
+    d = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - np.asarray(b)).max()),
+        {"blocks": p1["blocks"], "embed": p1["embed"]}, p2)))
+    assert d < 5e-4, (M, d)
+    print("OK", M, float(l2), d)
+""")
+    assert out.count("OK") == 3

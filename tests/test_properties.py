@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system-level invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import env as env_lib
+from repro.core import ga as ga_lib
+from repro.core import reinforce
+from repro.costmodel import dataflows as dfl
+from repro.costmodel.layers import LayerSpec
+
+WL = [LayerSpec.conv(16, 8, 14, 14, 3, 3),
+      LayerSpec.dwconv(32, 7, 7, 3, 3),
+      LayerSpec.gemm(32, 64, 64)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(pe=st.lists(st.integers(1, 128), min_size=3, max_size=3),
+       kt=st.lists(st.integers(1, 12), min_size=3, max_size=3),
+       df=st.sampled_from([dfl.DLA, dfl.EYE, dfl.SHI]))
+def test_lp_constraint_is_sum_of_layers(pe, kt, df):
+    """LP whole-model constraint == sum of per-layer constraints."""
+    ecfg = env_lib.EnvConfig(platform="cloud", dataflow=df)
+    env = env_lib.make_env(WL, ecfg)
+    pe_a = jnp.asarray(pe, jnp.float32)
+    kt_a = jnp.asarray(kt, jnp.float32)
+    _, cons, _ = env_lib.genome_cost(env, ecfg, pe_a, kt_a, df)
+    per_layer = sum(
+        float(env_lib.layer_cost(env, ecfg, t, pe_a[t], kt_a[t], df)[1])
+        for t in range(3))
+    np.testing.assert_allclose(float(cons), per_layer, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rollout_rewards_nonnegative_while_feasible(seed):
+    """Paper SIII-E: R = P_t - P_min >= 0 whenever the budget holds."""
+    import jax
+
+    ecfg = env_lib.EnvConfig(platform="cloud")
+    env = env_lib.make_env(WL, ecfg)
+    pcfg = __import__("repro.core.policy", fromlist=["PolicyConfig"]
+                      ).PolicyConfig(obs_dim=ecfg.obs_dim)
+    params = __import__("repro.core.policy", fromlist=["init_params"]
+                        ).init_params(jax.random.PRNGKey(seed), pcfg)
+    rollout = reinforce.make_rollout(ecfg, pcfg, env, 0.9)
+    out = rollout(params, jnp.asarray(jnp.inf, jnp.float32),
+                  jax.random.PRNGKey(seed + 1))
+    r = np.asarray(out.rewards)
+    mask = np.asarray(out.mask).astype(bool)
+    feasible = bool(out.feasible)
+    if feasible:
+        assert (r[mask] >= -1e-5).all(), r
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_local_ga_never_worse_than_feasible_seed(seed):
+    """Stage-2 fine-tune keeps the seed in the elite: monotone improvement."""
+    ecfg = env_lib.EnvConfig(platform="cloud")
+    env = env_lib.make_env(WL, ecfg)
+    rng = np.random.default_rng(seed)
+    pe = env.pe_table[rng.integers(0, 12, size=3)]
+    kt = env.kt_table[rng.integers(0, 12, size=3)]
+    perf, _, feas = env_lib.genome_cost(
+        env, ecfg, jnp.asarray(pe, jnp.float32),
+        jnp.asarray(kt, jnp.float32), ecfg.dataflow)
+    if not bool(feas):
+        return
+    res = ga_lib.local_ga(WL, ecfg, pe, kt,
+                          np.full(3, ecfg.dataflow, np.int32),
+                          ga_lib.LocalGAConfig(population=8,
+                                               generations=40, seed=seed))
+    assert float(res.best_value) <= float(perf) * (1 + 1e-6)
+
+
+def test_collective_loop_scaling_monotone():
+    """Loop-scaled collective bytes >= unscaled (trip counts >= 1)."""
+    from repro.distributed import hlo_analysis
+    hlo = """
+HloModule m
+%cond (s: (s32[], f32[8])) -> pred[] {
+  %s = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %k = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+%body (s: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %s = (s32[], f32[8]) parameter(0)
+  %x = f32[8]{0} get-tuple-element(%s), index=1
+  %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups={{0,1}}, to_apply=%add
+  %i = s32[] get-tuple-element(%s), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8]) tuple(%z, %p)
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %o = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+    scaled = hlo_analysis.collective_stats(hlo)
+    raw = hlo_analysis.collective_stats(hlo, scale_loops=False)
+    assert scaled["all-reduce"] == 5 * raw["all-reduce"] > 0

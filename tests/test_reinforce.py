@@ -1,0 +1,120 @@
+"""REINFORCE core: reward shaping semantics + search convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env as env_lib
+from repro.core import ga as ga_lib
+from repro.core import policy as policy_lib
+from repro.core import reinforce, search
+from repro.costmodel import workloads
+from repro.costmodel.layers import LayerSpec
+
+
+def _tiny_workload():
+    return [LayerSpec.conv(32, 16, 28, 28, 3, 3),
+            LayerSpec.dwconv(64, 14, 14, 3, 3),
+            LayerSpec.gemm(64, 256, 128)]
+
+
+def _rollout_once(ecfg, seed=0):
+    env = env_lib.make_env(_tiny_workload(), ecfg)
+    pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, mix=ecfg.mix)
+    params = policy_lib.init_params(jax.random.PRNGKey(seed), pcfg)
+    rollout = reinforce.make_rollout(ecfg, pcfg, env, 0.9)
+    return rollout(params, jnp.asarray(jnp.inf), jax.random.PRNGKey(seed))
+
+
+def test_rewards_nonnegative_while_feasible():
+    """R = P_t - P_min >= 0 whenever the budget holds (SIII-E)."""
+    ecfg = env_lib.EnvConfig(platform="unlimited")
+    out = _rollout_once(ecfg)
+    assert bool(out.feasible)
+    assert np.all(np.asarray(out.rewards) >= -1e-4)
+
+
+def test_violation_penalty_is_negative_accumulated():
+    """Violating step reward == -(sum of previous rewards); episode ends."""
+    ecfg = env_lib.EnvConfig(platform="iotx")
+    found = False
+    for seed in range(20):
+        out = _rollout_once(ecfg, seed)
+        r = np.asarray(out.rewards)
+        m = np.asarray(out.mask)
+        if not bool(out.feasible):
+            t = int(m.sum()) - 1          # the violating step
+            assert r[t] <= 0
+            assert r[t] == pytest.approx(-r[:t].sum(), rel=1e-4, abs=1e-3)
+            assert np.all(m[t + 1:] == 0)  # steps after violation masked
+            found = True
+            break
+    assert found, "no violating episode found under IoTx"
+
+
+def test_pmin_monotone():
+    ecfg = env_lib.EnvConfig(platform="unlimited")
+    env = env_lib.make_env(_tiny_workload(), ecfg)
+    pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim)
+    params = policy_lib.init_params(jax.random.PRNGKey(0), pcfg)
+    rollout = reinforce.make_rollout(ecfg, pcfg, env, 0.9)
+    pmin = jnp.asarray(jnp.inf)
+    prev = np.inf
+    for s in range(5):
+        out = rollout(params, pmin, jax.random.PRNGKey(s))
+        pmin = out.pmin
+        assert float(pmin) <= prev
+        prev = float(pmin)
+
+
+def test_search_converges_and_beats_random():
+    ecfg = env_lib.EnvConfig(platform="iot")
+    rcfg = reinforce.ReinforceConfig(epochs=300, episodes_per_epoch=4,
+                                     lr=3e-3, seed=0)
+    state, hist = reinforce.run_search(_tiny_workload(), ecfg, rcfg)
+    assert np.isfinite(hist["best_value"][-1])
+    # improves over its first feasible value
+    finite = hist["best_value"][np.isfinite(hist["best_value"])]
+    assert finite[-1] < finite[0]
+    # the solution respects the constraint when re-evaluated
+    env = env_lib.make_env(_tiny_workload(), ecfg)
+    pe, kt, df = reinforce.solution_arrays(state, env)
+    perf, cons, feas = env_lib.genome_cost(env, ecfg, pe, kt, df)
+    assert bool(feas)
+    assert float(perf) == pytest.approx(float(state.best_value), rel=1e-4)
+
+
+def test_mix_agent_runs():
+    ecfg = env_lib.EnvConfig(platform="iot", mix=True)
+    rcfg = reinforce.ReinforceConfig(epochs=100, episodes_per_epoch=2)
+    state, hist = reinforce.run_search(_tiny_workload(), ecfg, rcfg)
+    assert np.isfinite(hist["best_value"][-1])
+    assert set(np.unique(np.asarray(state.best_df))) <= {0, 1, 2}
+
+
+def test_mlp_policy_runs():
+    ecfg = env_lib.EnvConfig(platform="cloud")
+    pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, kind="mlp")
+    rcfg = reinforce.ReinforceConfig(epochs=50, episodes_per_epoch=2)
+    state, hist = reinforce.run_search(_tiny_workload(), ecfg, rcfg, pcfg)
+    assert np.isfinite(hist["best_value"][-1])
+
+
+def test_two_stage_improves():
+    ecfg = env_lib.EnvConfig(platform="iot")
+    res = search.confuciux_search(
+        _tiny_workload(), ecfg,
+        reinforce.ReinforceConfig(epochs=200, episodes_per_epoch=4),
+        ga_lib.LocalGAConfig(generations=200))
+    assert res.best_value <= res.stage1_value
+    assert res.stage1_value <= res.initial_valid_value
+
+
+def test_ls_per_layer_optima():
+    ecfg = env_lib.EnvConfig(platform="unlimited", scenario="LS")
+    grids = search.per_layer_optima(_tiny_workload(), ecfg)
+    assert grids["latency"].shape[0] == 3
+    # each layer's optimum is the true grid argmin
+    for i in range(3):
+        m = grids["latency"][i]
+        assert m.min() == m[tuple(grids["optima_latency"][i])]

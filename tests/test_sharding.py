@@ -1,0 +1,95 @@
+"""Sharding rules: divisibility guards, per-family placement, policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed import sharding
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single CPU device: a (1,1) mesh still exercises all the rule logic
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_rules_match_paths(mesh):
+    assert sharding.param_spec(mesh, "blocks/attn/wq", (64, 64)) == \
+        P("data", "model")
+    assert sharding.param_spec(mesh, "blocks/attn/wo", (64, 64)) == \
+        P("model", "data")
+    assert sharding.param_spec(mesh, "blocks/moe/w_gate", (8, 64, 64)) == \
+        P("model", "data", None)
+    assert sharding.param_spec(mesh, "embed/tok", (256, 64)) == \
+        P("model", "data")
+    assert sharding.param_spec(mesh, "blocks/ln1", (64,)) == P()
+    # stacked leading dims replicate
+    assert sharding.param_spec(mesh, "blocks/mlp/w_up", (4, 64, 64)) == \
+        P(None, "data", "model")
+
+
+def test_divisibility_fallback():
+    """A dim that doesn't divide the axis falls back, never errors."""
+    big = jax.make_mesh((1, 1), ("data", "model"))
+    # pretend-mesh of size 1 always divides; test assign_spec directly
+    spec = sharding.assign_spec(big, (7, 13), ((("model",),), (("data",),)))
+    assert spec == P("model", "data")  # size-1 axes divide everything
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 16}
+
+    spec = sharding.assign_spec(FakeMesh(), (7, 64),
+                                ((("model",),), (("model",), ("data",))))
+    assert spec == P(None, "model")  # 7 % 16 != 0 -> None; 64 % 16 == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(d0=st.integers(1, 512), d1=st.integers(1, 512),
+       data=st.sampled_from([2, 4, 16]), model=st.sampled_from([2, 16]))
+def test_assign_spec_properties(d0, d1, data, model):
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": data, "model": model}
+
+    spec = sharding.assign_spec(
+        FakeMesh(), (d0, d1),
+        ((("data",), ("model",)), (("model",), ("data",))))
+    sizes = {"data": data, "model": model}
+    used = [a for a in spec if a is not None]
+    assert len(used) == len(set(used))        # each axis used at most once
+    for dim, ax in zip((d0, d1), spec):
+        if ax is not None:
+            assert dim % sizes[ax] == 0       # divisibility always honored
+
+
+@pytest.mark.parametrize("arch", ["qwen3_32b", "qwen3_moe_235b",
+                                  "mamba2_130m", "zamba2_1p2b"])
+def test_tree_shardings_cover_params(mesh, arch):
+    cfg = configs.get_smoke(arch)
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    sh = sharding.tree_shardings(mesh, shapes)
+    assert jax.tree_util.tree_structure(sh) == \
+        jax.tree_util.tree_structure(shapes)
+
+
+def test_policy_noop_on_tiny_mesh(mesh):
+    pol = sharding.make_policy(mesh, batch=4, kind="train")
+    x = jnp.ones((4, 8, 16))
+    np.testing.assert_array_equal(np.asarray(pol.resid(x)), np.asarray(x))
+
+
+def test_batch_axis_selection():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert sharding._batch_axis(FakeMesh(), 256) == ("pod", "data")
+    assert sharding._batch_axis(FakeMesh(), 16) == ("data",)
+    assert sharding._batch_axis(FakeMesh(), 1) is None
