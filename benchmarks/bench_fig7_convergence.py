@@ -1,7 +1,9 @@
 """Fig. 7: convergence / sample-efficiency traces.
 
-Best-so-far objective vs epoch for Con'X(global), PPO2, GA, random -- the
-traces behind the paper's fast-convergence claim.  Exported to JSON for
+Best-so-far objective vs sample for Con'X(global), PPO2, GA, random -- the
+traces behind the paper's fast-convergence claim.  Every trace is the
+unified SearchOutcome.history (length == Eps, monotone best-so-far), so the
+methods are directly comparable sample-for-sample.  Exported to JSON for
 plotting; the table reports value at checkpoints (10%/30%/100% of budget).
 """
 from __future__ import annotations
@@ -9,47 +11,42 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import baselines, env as env_lib, ga as ga_lib, reinforce, \
-    rl_baselines, search
+from repro import api
 from repro.costmodel import workloads
+
+METHODS = [
+    ("reinforce", {}),
+    ("ppo2", {}),
+    ("ga", {"population": 100}),
+    ("random", {}),
+]
 
 
 def _at(trace, frac):
     trace = np.asarray(trace, dtype=float)
     i = min(len(trace) - 1, max(0, int(frac * len(trace)) - 1))
-    v = np.minimum.accumulate(np.where(np.isfinite(trace), trace, np.inf))
-    return float(v[i])
+    return float(trace[i])
 
 
 def run(budget_name: str = "quick") -> dict:
     eps = common.budget(budget_name)["eps"]
     wl = workloads.mobilenet_v2()
-    ecfg = env_lib.EnvConfig(platform="iot")
+    ecfg = api.EnvConfig(platform="iot")
 
     traces = {}
-    res = search.confuciux_search(
-        wl, ecfg, rcfg=reinforce.ReinforceConfig(epochs=eps,
-                                                 episodes_per_epoch=1),
-        fine_tune=False)
-    traces["conx"] = res.history["best_value"]
-    _, hist = rl_baselines.run_ac_search(
-        wl, ecfg, rl_baselines.ACConfig(algo="ppo2", epochs=eps,
-                                        episodes_per_epoch=1))
-    traces["ppo2"] = hist["best_value"]
-    ga_res = ga_lib.baseline_ga(
-        wl, ecfg, ga_lib.GAConfig(population=100,
-                                  generations=max(eps // 100, 1)))
-    traces["ga"] = np.repeat(np.asarray(ga_res.history), 100)[:eps]
-    traces["random"] = baselines.random_search(wl, ecfg, eps=eps).history
+    for name, opts in METHODS:
+        out = api.run_search(api.SearchRequest(
+            workload=wl, env=ecfg, eps=eps, method=name, options=opts))
+        traces[name] = out.history
 
-    rows = []
-    for name, tr in traces.items():
-        rows.append([name, _at(tr, 0.1), _at(tr, 0.3), _at(tr, 1.0)])
+    rows = [[name, _at(tr, 0.1), _at(tr, 0.3), _at(tr, 1.0)]
+            for name, tr in traces.items()]
     common.print_table(
-        f"Fig. 7 (best-so-far latency vs epoch, MobileNet-V2 IoT, Eps={eps})",
+        f"Fig. 7 (best-so-far latency vs sample, MobileNet-V2 IoT, "
+        f"Eps={eps})",
         ["method", "@10%", "@30%", "@100%"], rows)
     return {"eps": eps,
-            "traces": {k: np.asarray(v, dtype=float).tolist()[:eps]
+            "traces": {k: np.asarray(v, dtype=float).tolist()
                        for k, v in traces.items()},
             "checkpoints": {r[0]: r[1:] for r in rows}}
 

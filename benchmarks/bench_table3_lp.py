@@ -2,15 +2,16 @@
 
 GA vs PPO2 vs Con'X(global), objective latency, area constraint.  The
 paper's pattern: GA NANs out under tight constraints (IoT/IoTx); PPO2 and
-Con'X always find feasible points; Con'X is as good or better.
+Con'X always find feasible points; Con'X is as good or better.  One registry
+loop per row -- every method shares the same request/outcome schema.
 """
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import env as env_lib, ga as ga_lib, reinforce, \
-    rl_baselines, search
+from repro import api
 from repro.costmodel import dataflows as dfl
-from repro.costmodel import workloads
+
+METHODS = [("ga", {"population": 100}), ("ppo2", {}), ("reinforce", {})]
 
 ROWS_FULL = [
     ("mobilenet_v2", "dla", "iot"), ("mobilenet_v2", "eye", "iotx"),
@@ -38,26 +39,20 @@ def run(budget_name: str = "quick") -> dict:
     out_rows, payload = [], []
     n_ga_nan = n_conx_best = 0
     for model, df, plat in rows:
-        wl = workloads.get_workload(model)
-        ecfg = env_lib.EnvConfig(platform=plat,
-                                 dataflow=dfl.DATAFLOW_NAMES.index(df))
-        ga_v = float(ga_lib.baseline_ga(
-            wl, ecfg, ga_lib.GAConfig(population=100,
-                                      generations=max(eps // 100, 1))
-        ).best_value)
-        ppo_state, _ = rl_baselines.run_ac_search(
-            wl, ecfg, rl_baselines.ACConfig(algo="ppo2", epochs=eps,
-                                            episodes_per_epoch=1))
-        ppo_v = float(ppo_state.best_value)
-        conx_v = search.confuciux_search(
-            wl, ecfg, rcfg=reinforce.ReinforceConfig(
-                epochs=eps, episodes_per_epoch=1),
-            fine_tune=False).best_value
-        n_ga_nan += ga_v == float("inf")
-        n_conx_best += conx_v <= min(ga_v, ppo_v) * 1.001
-        payload.append({"model": model, "dataflow": df, "platform": plat,
-                        "ga": ga_v, "ppo2": ppo_v, "conx_global": conx_v})
-        out_rows.append([f"{model}-{df}", plat, ga_v, ppo_v, conx_v])
+        ecfg = api.EnvConfig(platform=plat,
+                             dataflow=dfl.DATAFLOW_NAMES.index(df))
+        rec = {"model": model, "dataflow": df, "platform": plat}
+        for name, opts in METHODS:
+            out = api.run_search(api.SearchRequest(
+                workload=model, env=ecfg, eps=eps, method=name,
+                options=opts))
+            rec[name] = out.best_value
+        n_ga_nan += rec["ga"] == float("inf")
+        n_conx_best += (rec["reinforce"]
+                        <= min(rec["ga"], rec["ppo2"]) * 1.001)
+        payload.append(rec)
+        out_rows.append([f"{model}-{df}", plat, rec["ga"], rec["ppo2"],
+                         rec["reinforce"]])
     common.print_table(
         f"Table III (LP converged latency, Eps={eps})",
         ["model", "cstr", "GA", "PPO2", "Con'X(g)"], out_rows)

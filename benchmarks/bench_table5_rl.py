@@ -3,17 +3,17 @@ sample efficiency (epochs to convergence).
 
 REINFORCE (Con'X global) vs the actor-critic baselines A2C and PPO2 on the
 same env/observation/reward.  The paper's claims: (1) REINFORCE reaches
-equal-or-better objective values; (2) it converges 4.7-24x faster.  We
-measure convergence as the first epoch reaching within 5% of the method's
-own final best ("epochs to converge"), plus wall seconds.
+equal-or-better objective values; (2) it converges 4.7-24x faster.
+Convergence (first sample within 5% of the method's own final best) and
+wall time come straight off the unified SearchOutcome -- the sweep is one
+loop over registry names with zero per-method branching.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
-from repro.core import env as env_lib, reinforce, rl_baselines, search
-from repro.costmodel import workloads
+from repro import api
+
+METHODS = ("reinforce", "a2c", "ppo2")
 
 ROWS_FULL = [
     ("mobilenet_v2", "latency", "area", "iot"),
@@ -26,57 +26,34 @@ ROWS_FULL = [
 ROWS_QUICK = ROWS_FULL[:3]
 
 
-def epochs_to_converge(best_trace: np.ndarray, tol: float = 0.05) -> int:
-    finite = np.isfinite(best_trace)
-    if not finite.any():
-        return len(best_trace)
-    final = best_trace[finite][-1]
-    ok = finite & (best_trace <= final * (1 + tol))
-    return int(np.argmax(ok)) + 1 if ok.any() else len(best_trace)
-
-
 def run(budget_name: str = "quick") -> dict:
     b = common.budget(budget_name)
     eps = b["eps"]
     rows = ROWS_FULL if b["rows"] == "all" else ROWS_QUICK
     out_rows, payload = [], []
     for model, obj, cstr, plat in rows:
-        wl = workloads.get_workload(model)
-        ecfg = env_lib.EnvConfig(objective=obj, constraint=cstr,
-                                 platform=plat)
+        ecfg = api.EnvConfig(objective=obj, constraint=cstr, platform=plat)
         rec = {"model": model, "objective": obj,
                "constraint": f"{cstr}:{plat}"}
-
-        with common.Timer() as t:
-            res = search.confuciux_search(
-                wl, ecfg, rcfg=reinforce.ReinforceConfig(
-                    epochs=eps, episodes_per_epoch=1), fine_tune=False)
-        rec["conx"] = {"value": res.best_value, "seconds": t.seconds,
-                       "epochs_conv": epochs_to_converge(
-                           res.history["best_value"])}
-
-        for algo in ("a2c", "ppo2"):
-            with common.Timer() as t:
-                state, hist = rl_baselines.run_ac_search(
-                    wl, ecfg, rl_baselines.ACConfig(
-                        algo=algo, epochs=eps, episodes_per_epoch=1))
-            rec[algo] = {"value": float(state.best_value),
-                         "seconds": t.seconds,
-                         "epochs_conv": epochs_to_converge(
-                             hist["best_value"])}
+        for method in METHODS:
+            out = api.run_search(api.SearchRequest(
+                workload=model, env=ecfg, eps=eps, method=method))
+            rec[method] = {"value": out.best_value,
+                           "seconds": out.wall_seconds,
+                           "epochs_conv": out.samples_to_convergence}
         payload.append(rec)
         # When a baseline never finds a feasible point its epochs_conv is
         # the full budget -- the true speedup is a LOWER bound.
         speedups, bounded = [], False
         for a in ("a2c", "ppo2"):
             speedups.append(rec[a]["epochs_conv"]
-                            / max(rec["conx"]["epochs_conv"], 1))
+                            / max(rec["reinforce"]["epochs_conv"], 1))
             bounded |= rec[a]["value"] == float("inf")
         pre = ">=" if bounded else ""
         out_rows.append([
             model, obj, f"{cstr}:{plat}",
-            rec["conx"]["value"], rec["conx"]["seconds"],
-            rec["conx"]["epochs_conv"],
+            rec["reinforce"]["value"], rec["reinforce"]["seconds"],
+            rec["reinforce"]["epochs_conv"],
             rec["a2c"]["value"], rec["a2c"]["epochs_conv"],
             rec["ppo2"]["value"], rec["ppo2"]["epochs_conv"],
             f"{pre}{min(speedups):.1f}-{max(speedups):.1f}x"])

@@ -2,14 +2,15 @@
 
 initial-valid value -> stage-1 (RL global) -> stage-2 (local GA), with the
 paper's improvement percentages (stage-1: 37.9-99.8%, stage-2: 7-93%).
+Driven through the registered "two_stage" optimizer; the stage breakdown
+rides in SearchOutcome.extras.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
-from repro.core import env as env_lib, ga as ga_lib, reinforce, search
-from repro.costmodel import workloads
+from repro import api
 
 ROWS_FULL = [
     ("mobilenet_v2", "iot"), ("mnasnet", "iot"), ("resnet50", "cloud"),
@@ -22,28 +23,27 @@ def run(budget_name: str = "quick") -> dict:
     b = common.budget(budget_name)
     eps, gens = b["eps"], b["ga_gens"]
     rows = ROWS_FULL if b["rows"] == "all" else ROWS_QUICK
+    opts = {"ga": {"population": 20, "generations": gens,
+                   "crossover_rate": 0.2, "mutation_rate": 0.05,
+                   "mutation_step": 4}}
     out_rows, payload = [], []
     for model, plat in rows:
-        wl = workloads.get_workload(model)
-        ecfg = env_lib.EnvConfig(platform=plat)
-        res = search.confuciux_search(
-            wl, ecfg,
-            rcfg=reinforce.ReinforceConfig(epochs=eps, episodes_per_epoch=1),
-            gcfg=ga_lib.LocalGAConfig(population=20, generations=gens,
-                                      crossover_rate=0.2, mutation_rate=0.05,
-                                      mutation_step=4))
-        s1 = (100 * (1 - res.stage1_value / res.initial_valid_value)
-              if np.isfinite(res.initial_valid_value) else None)
-        s2 = (100 * (1 - res.best_value / res.stage1_value)
-              if np.isfinite(res.stage1_value) else None)
+        out = api.run_search(api.SearchRequest(
+            workload=model, env=api.EnvConfig(platform=plat), eps=eps,
+            method="two_stage", options=opts))
+        initial = out.extras["initial_valid_value"]
+        stage1 = out.extras["stage1_value"]
+        s1 = (100 * (1 - stage1 / initial)
+              if np.isfinite(initial) else None)
+        s2 = (100 * (1 - out.best_value / stage1)
+              if np.isfinite(stage1) else None)
         payload.append({"model": model, "platform": plat,
-                        "initial_valid": res.initial_valid_value,
-                        "stage1": res.stage1_value, "stage2": res.best_value,
+                        "initial_valid": initial,
+                        "stage1": stage1, "stage2": out.best_value,
                         "stage1_impr_pct": s1, "stage2_impr_pct": s2})
-        out_rows.append([f"{model}-dla", plat, res.initial_valid_value,
-                         res.stage1_value,
+        out_rows.append([f"{model}-dla", plat, initial, stage1,
                          f"{s1:.1f}%" if s1 is not None else "-",
-                         res.best_value,
+                         out.best_value,
                          f"{s2:.1f}%" if s2 is not None else "-"])
     common.print_table(
         f"Table VII (two-stage optimization, Eps={eps}, GA gens={gens})",

@@ -1,14 +1,13 @@
 """Table IX: policy-network ablation -- MLP vs RNN(LSTM) x action levels L.
 
 The paper: the RNN beats the MLP (it can remember consumed budget) and
-L=12 is the sweet spot.
+L=12 is the sweet spot.  The policy variant is a ``policy`` option on the
+unified request -- same registered optimizer, same outcome schema.
 """
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import env as env_lib, policy as policy_lib, reinforce, \
-    search
-from repro.costmodel import workloads
+from repro import api
 
 PLATFORMS_FULL = ["cloud", "iot", "iotx"]
 PLATFORMS_QUICK = ["iot"]
@@ -21,21 +20,17 @@ def run(budget_name: str = "quick") -> dict:
     # advantage shows (it starts behind at tiny budgets); floor at 2000.
     eps = max(b["eps"], 2000)
     platforms = (PLATFORMS_FULL if b["rows"] == "all" else PLATFORMS_QUICK)
-    wl = workloads.mobilenet_v2()
     out_rows, payload = [], []
     for kind in ("mlp", "rnn"):
         for plat in platforms:
             vals = {}
             for L in LEVELS:
-                ecfg = env_lib.EnvConfig(platform=plat, levels=L)
-                pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim,
-                                               levels=L, kind=kind)
-                res = search.confuciux_search(
-                    wl, ecfg,
-                    rcfg=reinforce.ReinforceConfig(epochs=eps,
-                                                   episodes_per_epoch=1),
-                    pcfg=pcfg, fine_tune=False)
-                vals[L] = res.best_value
+                out = api.run_search(api.SearchRequest(
+                    workload="mobilenet_v2",
+                    env=api.EnvConfig(platform=plat, levels=L), eps=eps,
+                    method="reinforce",
+                    options={"policy": {"kind": kind}}))
+                vals[L] = out.best_value
             payload.append({"net": kind, "platform": plat,
                             **{f"L{L}": vals[L] for L in LEVELS}})
             out_rows.append([kind.upper(), plat] + [vals[L] for L in LEVELS])

@@ -3,10 +3,11 @@
     PYTHONPATH=src python examples/dataflow_codesign.py [--epochs 800]
 
 Runs Con'X(global) with each fixed dataflow style and with the MIX agent
-(third per-layer action choosing the style), then prints the converged
-values and the per-layer style choices the MIX agent made -- reproducing
-the paper's observation that early layers favour eye/shi (activation
-parallelism) and late layers favour dla (channel parallelism).
+(third per-layer action choosing the style) -- all through the one
+registered "reinforce" optimizer, varying only the EnvConfig -- then prints
+the converged values and the per-layer style choices the MIX agent made,
+reproducing the paper's observation that early layers favour eye/shi
+(activation parallelism) and late layers favour dla (channel parallelism).
 """
 import argparse
 import sys
@@ -15,10 +16,8 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import env as env_lib                      # noqa: E402
-from repro.core import reinforce, search                   # noqa: E402
+from repro import api                                      # noqa: E402
 from repro.costmodel import dataflows as dfl               # noqa: E402
-from repro.costmodel import workloads                      # noqa: E402
 
 
 def main():
@@ -27,19 +26,23 @@ def main():
     ap.add_argument("--workload", default="mobilenet_v2")
     args = ap.parse_args()
 
-    wl = workloads.get_workload(args.workload)
-    rcfg = reinforce.ReinforceConfig(epochs=args.epochs, episodes_per_epoch=4)
+    episodes = 4
+    eps = args.epochs * episodes
+    opts = {"episodes_per_epoch": episodes}
 
     results = {}
     for name in ("dla", "eye", "shi"):
-        ecfg = env_lib.EnvConfig(platform="iot",
-                                 dataflow=dfl.DATAFLOW_NAMES.index(name))
-        res = search.confuciux_search(wl, ecfg, rcfg, fine_tune=False)
-        results[name] = res.best_value
-        print(f"Con'X-{name}: {res.best_value:.3e} cycles")
+        out = api.run_search(api.SearchRequest(
+            workload=args.workload,
+            env=api.EnvConfig(platform="iot",
+                              dataflow=dfl.DATAFLOW_NAMES.index(name)),
+            eps=eps, method="reinforce", options=opts))
+        results[name] = out.best_value
+        print(f"Con'X-{name}: {out.best_value:.3e} cycles")
 
-    ecfg = env_lib.EnvConfig(platform="iot", mix=True)
-    mix = search.confuciux_search(wl, ecfg, rcfg, fine_tune=False)
+    mix = api.run_search(api.SearchRequest(
+        workload=args.workload, env=api.EnvConfig(platform="iot", mix=True),
+        eps=eps, method="reinforce", options=opts))
     results["MIX"] = mix.best_value
     best_fixed = min(v for k, v in results.items() if k != "MIX")
     print(f"Con'X-MIX: {mix.best_value:.3e} cycles "
@@ -47,7 +50,7 @@ def main():
 
     print("\nMIX per-layer dataflow choices:")
     row = "".join(dfl.DATAFLOW_NAMES[int(d)][0] for d in mix.df)
-    print(f"  {row}   (d=dla, e=eye, s=shi; layer 0 -> {len(wl) - 1})")
+    print(f"  {row}   (d=dla, e=eye, s=shi; layer 0 -> {len(mix.df) - 1})")
     assert np.isfinite(mix.best_value)
 
 

@@ -3,9 +3,11 @@
     PYTHONPATH=src python examples/quickstart.py [--epochs 1500]
 
 Runs the full two-stage pipeline (Fig. 3) -- REINFORCE global search then
-local-GA fine-tune -- on the paper's headline workload with NVDLA-style
-dataflow, then prints the per-layer (PE, Buffer) assignment and the
-improvement breakdown (the Table VII columns).
+local-GA fine-tune -- through the unified optimizer API, then prints the
+per-layer (PE, Buffer) assignment and the improvement breakdown (the
+Table VII columns).  Swap ``--method`` for any registered optimizer
+(ga, sa, bo, random, grid, a2c, ppo2, ...) to compare under the exact same
+request/outcome schema.
 """
 import argparse
 import sys
@@ -14,9 +16,7 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import env as env_lib                      # noqa: E402
-from repro.core import ga as ga_lib                        # noqa: E402
-from repro.core import reinforce, search                   # noqa: E402
+from repro import api                                      # noqa: E402
 from repro.costmodel import workloads                      # noqa: E402
 
 
@@ -25,32 +25,48 @@ def main():
     ap.add_argument("--epochs", type=int, default=1500)
     ap.add_argument("--episodes", type=int, default=4,
                     help="vmapped episodes/epoch (1 = paper-faithful)")
+    ap.add_argument("--method", default="two_stage",
+                    help=f"one of {', '.join(api.list_optimizers())}")
     args = ap.parse_args()
 
     wl = workloads.mobilenet_v2()
-    ecfg = env_lib.EnvConfig(objective="latency", constraint="area",
-                             platform="iot", scenario="LP")
-    res = search.confuciux_search(
-        wl, ecfg,
-        rcfg=reinforce.ReinforceConfig(epochs=args.epochs,
-                                       episodes_per_epoch=args.episodes),
-        gcfg=ga_lib.LocalGAConfig(generations=500))
+    options = {"episodes_per_epoch": args.episodes}
+    if args.method == "two_stage":
+        options["ga"] = {"generations": 500}
+    out = api.run_search(api.SearchRequest(
+        workload=wl,
+        env=api.EnvConfig(objective="latency", constraint="area",
+                          platform="iot", scenario="LP"),
+        eps=args.epochs * args.episodes,
+        method=args.method,
+        options=options))
+
+    if not out.feasible:
+        print(f"\n{out.method}: no feasible point within eps={out.eps} "
+              "under the IoT area budget (the paper's NAN)")
+        sys.exit(1)
 
     print(f"\nMobileNet-V2 / NVDLA-style / IoT area budget "
-          f"(objective: latency, {args.epochs} epochs)")
-    print(f"  first feasible value : {res.initial_valid_value:.3e} cycles")
-    s1 = 100 * (1 - res.stage1_value / res.initial_valid_value)
-    s2 = 100 * (1 - res.best_value / res.stage1_value)
-    print(f"  after RL global      : {res.stage1_value:.3e}  (-{s1:.1f}%)")
-    print(f"  after GA fine-tune   : {res.best_value:.3e}  (-{s2:.1f}%)")
-    print(f"  wall time            : {res.wall_seconds:.1f}s\n")
+          f"(objective: latency, method: {out.method}, eps: {out.eps})")
+    if out.method == "two_stage":
+        initial = out.extras["initial_valid_value"]
+        stage1 = out.extras["stage1_value"]
+        s1 = 100 * (1 - stage1 / initial)
+        s2 = 100 * (1 - out.best_value / stage1)
+        print(f"  first feasible value : {initial:.3e} cycles")
+        print(f"  after RL global      : {stage1:.3e}  (-{s1:.1f}%)")
+        print(f"  after GA fine-tune   : {out.best_value:.3e}  (-{s2:.1f}%)")
+    else:
+        print(f"  best value           : {out.best_value:.3e} cycles")
+    print(f"  samples to converge  : {out.samples_to_convergence}")
+    print(f"  wall time            : {out.wall_seconds:.1f}s\n")
 
     print("per-layer assignment (first 12 layers):")
     print(f"  {'layer':24s} {'PE':>4s} {'Buf(kt)':>8s}")
     for i in range(min(12, len(wl))):
-        print(f"  {wl[i].name:24s} {int(res.pe[i]):4d} {int(res.kt[i]):8d}")
+        print(f"  {wl[i].name:24s} {int(out.pe[i]):4d} {int(out.kt[i]):8d}")
     print(f"  ... ({len(wl)} layers total)")
-    assert np.isfinite(res.best_value)
+    assert np.isfinite(out.best_value)
 
 
 if __name__ == "__main__":

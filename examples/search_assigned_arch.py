@@ -7,8 +7,8 @@ an LLM serving workload.
 The architecture config is lowered to its per-layer GEMM descriptor list
 (QKV/O projections, FFN matmuls, attention score/context batched GEMMs --
 exactly the paper's (M,N,K) observation encoding for GEMM layers), and the
-two-stage search assigns (PE, Buffer[, dataflow]) per layer under the
-platform budget.
+two-stage search -- via the unified optimizer API -- assigns
+(PE, Buffer[, dataflow]) per layer under the platform budget.
 """
 import argparse
 import sys
@@ -17,8 +17,7 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import env as env_lib                      # noqa: E402
-from repro.core import reinforce, search                   # noqa: E402
+from repro import api                                      # noqa: E402
 from repro.costmodel import arch_workloads                 # noqa: E402
 from repro.costmodel import dataflows as dfl               # noqa: E402
 from repro.costmodel.layers import total_macs              # noqa: E402
@@ -38,26 +37,28 @@ def main():
     print(f"{args.arch}: {len(wl)} layer descriptors, "
           f"{total_macs(wl)/1e9:.1f} GMACs @ {args.tokens} tokens")
 
-    ecfg = env_lib.EnvConfig(objective="latency", constraint="area",
-                             platform=args.platform, mix=args.mix)
-    res = search.confuciux_search(
-        wl, ecfg,
-        rcfg=reinforce.ReinforceConfig(epochs=args.epochs,
-                                       episodes_per_epoch=4),
-        fine_tune=True)
+    episodes = 4
+    out = api.run_search(api.SearchRequest(
+        workload=wl,
+        env=api.EnvConfig(objective="latency", constraint="area",
+                          platform=args.platform, mix=args.mix),
+        eps=args.epochs * episodes,
+        method="two_stage",
+        options={"episodes_per_epoch": episodes}))
 
-    print(f"\nbest latency: {res.best_value:.3e} cycles "
-          f"(stage1 {res.stage1_value:.3e}) in {res.wall_seconds:.1f}s")
+    print(f"\nbest latency: {out.best_value:.3e} cycles "
+          f"(stage1 {out.extras['stage1_value']:.3e}) "
+          f"in {out.wall_seconds:.1f}s")
     print("\nassignment by layer group:")
     seen = {}
     for i, l in enumerate(wl):
         group = (l.name or f"layer{i}").split(".")[-1]
-        key = (group, int(res.pe[i]), int(res.kt[i]), int(res.df[i]))
+        key = (group, int(out.pe[i]), int(out.kt[i]), int(out.df[i]))
         seen[key] = seen.get(key, 0) + 1
     for (group, pe, kt, df), n in sorted(seen.items()):
         print(f"  {group:20s} x{n:3d}  PE={pe:4d} kt={kt:3d} "
               f"df={dfl.DATAFLOW_NAMES[df]}")
-    assert np.isfinite(res.best_value)
+    assert np.isfinite(out.best_value)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""Unified Optimizer API: one registry, one request/outcome schema.
+
+    from repro import api
+
+    out = api.run_search(api.SearchRequest(
+        workload="mobilenet_v2",
+        env=api.EnvConfig(platform="iot"),
+        eps=5000, method="two_stage"))
+    print(out.best_value, out.samples_to_convergence)
+
+    for name in api.list_optimizers():
+        out = api.get_optimizer(name).run(request)   # same schema for all
+
+Registered methods: reinforce (stage-1 Con'X), two_stage (Con'X + local-GA
+fine-tune), ga, sa, bo, random, grid, a2c, ppo2, plus the distributed
+wrappers fanout and dist_reinforce.
+"""
+from repro.api.registry import (Optimizer, get_optimizer, list_optimizers,
+                                register, run_search)
+from repro.api.types import (SearchOutcome, SearchRequest, Trial,
+                             samples_to_convergence)
+from repro.core.env import EnvConfig
+
+__all__ = [
+    "EnvConfig",
+    "Optimizer",
+    "SearchOutcome",
+    "SearchRequest",
+    "Trial",
+    "get_optimizer",
+    "list_optimizers",
+    "register",
+    "run_search",
+    "samples_to_convergence",
+]

@@ -1,0 +1,268 @@
+"""Built-in optimizer adapters: every search method behind one API.
+
+Each adapter translates ``SearchRequest`` into the legacy engine's config,
+runs it, and normalizes the result into ``SearchOutcome`` (trace length ==
+eps, monotone best-so-far, per-layer (pe, kt, df) arrays).  The engines in
+``repro.core`` are unchanged and remain callable directly -- these are the
+canonical entry points the launcher, benchmarks, examples and the
+distributed layer all share.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import types
+from repro.api.registry import register
+from repro.api.types import SearchOutcome, SearchRequest, Trial
+from repro.core import baselines
+from repro.core import env as env_lib
+from repro.core import ga as ga_lib
+from repro.core import policy as policy_lib
+from repro.core import reinforce
+from repro.core import rl_baselines
+from repro.core import search as search_lib
+
+
+_outcome = types.build_outcome
+
+
+def _policy_config(ecfg: env_lib.EnvConfig, opts) -> policy_lib.PolicyConfig:
+    pol = dict(opts.get("policy", {}))
+    return policy_lib.PolicyConfig(
+        obs_dim=ecfg.obs_dim, mix=ecfg.mix, levels=ecfg.levels,
+        hidden=pol.get("hidden", policy_lib.HIDDEN),
+        kind=pol.get("kind", "rnn"),
+        use_kernel=pol.get("use_kernel"))
+
+
+# ---------------------------------------------------------------------------
+# Classic baselines (single-shot engines; progress streams post-hoc).
+# ---------------------------------------------------------------------------
+@register("random")
+class RandomOptimizer:
+    name = "random"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        res = baselines.random_search(
+            request.resolve_workload(), request.env, eps=request.eps,
+            seed=request.seed, batch=opts.get("batch", 512))
+        return _outcome(request, self.name, res.best_value, res.best_pe,
+                        res.best_kt, None, res.history, t0)
+
+
+@register("grid")
+class GridOptimizer:
+    name = "grid"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        res = baselines.grid_search(
+            request.resolve_workload(), request.env, eps=request.eps,
+            stride=opts.get("stride", 1), batch=opts.get("batch", 512))
+        return _outcome(request, self.name, res.best_value, res.best_pe,
+                        res.best_kt, None, res.history, t0)
+
+
+@register("sa")
+class SimulatedAnnealingOptimizer:
+    name = "sa"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        cfg = baselines.SAConfig(
+            temperature=opts.get("temperature", 10.0),
+            step=opts.get("step", 1),
+            decay=opts.get("decay", 0.999),
+            seed=request.seed)
+        res = baselines.simulated_annealing(
+            request.resolve_workload(), request.env, eps=request.eps, cfg=cfg)
+        return _outcome(request, self.name, res.best_value, res.best_pe,
+                        res.best_kt, None, res.history, t0)
+
+
+@register("bo", aliases=("bayes",))
+class BayesOptOptimizer:
+    name = "bo"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        res = baselines.bayes_opt(
+            request.resolve_workload(), request.env, eps=request.eps,
+            seed=request.seed,
+            n_candidates=opts.get("n_candidates", 64),
+            gamma=opts.get("gamma", 0.15),
+            init_random=opts.get("init_random", 64),
+            batch=opts.get("batch", 16))
+        return _outcome(request, self.name, res.best_value, res.best_pe,
+                        res.best_kt, None, res.history, t0)
+
+
+@register("ga")
+class GeneticAlgorithmOptimizer:
+    """Baseline GA; ``eps`` buys population * generations individuals."""
+
+    name = "ga"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        pop = int(opts.get("population", 100))
+        gens = int(opts.get("generations", 0)) or max(request.eps // pop, 1)
+        cfg = ga_lib.GAConfig(
+            population=pop, generations=gens,
+            mutation_rate=opts.get("mutation_rate", 0.05),
+            crossover_rate=opts.get("crossover_rate", 0.05),
+            seed=request.seed)
+        res = ga_lib.baseline_ga(request.resolve_workload(), request.env, cfg)
+        trace = types.expand_trace(res.history, pop)
+        return _outcome(request, self.name, res.best_value, res.best_pe,
+                        res.best_kt, res.best_df, trace, t0,
+                        extras={"generations": gens, "population": pop})
+
+
+# ---------------------------------------------------------------------------
+# RL family (chunked engines; reinforce/two_stage stream live).
+# ---------------------------------------------------------------------------
+def _reinforce_cfg(request: SearchRequest):
+    opts = request.options
+    E = int(opts.get("episodes_per_epoch", 1))
+    epochs = max(request.eps // E, 1)
+    rcfg = reinforce.ReinforceConfig(
+        epochs=epochs, episodes_per_epoch=E,
+        lr=opts.get("lr", 3e-3),
+        discount=opts.get("discount", 0.9),
+        entropy_coef=opts.get("entropy_coef", 0.0),
+        seed=request.seed)
+    return rcfg, E
+
+
+def _chunk_args(request: SearchRequest, E: int):
+    """(chunk, on_chunk) for the stage-1 engine: stream live when asked.
+
+    The engine reuses its compiled epoch function across chunks, so a small
+    streaming chunk costs no extra XLA compilation.
+    """
+    if request.on_progress is None:
+        return 500, None
+
+    def on_chunk(state, hist, epochs_done):
+        request.on_progress(Trial(
+            min(epochs_done * E, request.eps),
+            float(np.min(hist["best_value"])), float(state.best_value)))
+
+    return max(request.progress_every // E, 1), on_chunk
+
+
+@register("reinforce", aliases=("rl", "conx_global"))
+class ReinforceOptimizer:
+    """Stage-1 ConfuciuX: REINFORCE global search (no GA fine-tune)."""
+
+    name = "reinforce"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        wl = request.resolve_workload()
+        rcfg, E = _reinforce_cfg(request)
+        pcfg = _policy_config(request.env, request.options)
+        chunk, on_chunk = _chunk_args(request, E)
+        state, hist = reinforce.run_search(wl, request.env, rcfg, pcfg,
+                                           chunk=chunk, on_chunk=on_chunk)
+        env = env_lib.make_env(wl, request.env)
+        pe, kt, df = reinforce.solution_arrays(state, env)
+        trace = types.expand_trace(hist["best_value"], E)
+        return _outcome(
+            request, self.name, state.best_value, np.asarray(pe),
+            np.asarray(kt), np.asarray(df), trace, t0,
+            extras={"epochs": rcfg.epochs, "history": hist},
+            streamed=request.on_progress is not None)
+
+
+@register("two_stage", aliases=("conx", "confuciux"))
+class TwoStageOptimizer:
+    """The full ConfuciuX pipeline: RL global search -> local-GA fine-tune."""
+
+    name = "two_stage"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        wl = request.resolve_workload()
+        opts = request.options
+        rcfg, E = _reinforce_cfg(request)
+        ga = dict(opts.get("ga", {}))
+        gcfg = ga_lib.LocalGAConfig(
+            population=ga.get("population", 20),
+            generations=ga.get("generations", 2000),
+            mutation_rate=ga.get("mutation_rate", 0.05),
+            crossover_rate=ga.get("crossover_rate", 0.2),
+            mutation_step=ga.get("mutation_step", 4),
+            seed=request.seed)
+        pcfg = _policy_config(request.env, opts)
+        chunk, on_chunk = _chunk_args(request, E)
+        res = search_lib.confuciux_search(
+            wl, request.env, rcfg, gcfg, pcfg,
+            fine_tune=opts.get("fine_tune", True),
+            chunk=chunk, on_chunk=on_chunk)
+        # Stage-2 GA evaluations happen after the eps budget; its gain is
+        # reflected at the trace's final sample so history[-1] equals the
+        # post-fine-tune best (full stage-2 curve: extras["ga_history"]).
+        trace = types.expand_trace(res.history["best_value"], E)
+        if len(trace):
+            trace[-1] = min(trace[-1], float(res.best_value))
+        return _outcome(
+            request, self.name, res.best_value, res.pe, res.kt, res.df,
+            trace, t0,
+            extras={"stage1_value": float(res.stage1_value),
+                    "initial_valid_value": float(res.initial_valid_value),
+                    "ga_history": np.asarray(res.ga_history),
+                    "history": res.history, "epochs": rcfg.epochs},
+            streamed=request.on_progress is not None)
+
+
+class _ActorCriticOptimizer:
+    algo = "a2c"
+    name = "a2c"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        wl = request.resolve_workload()
+        opts = request.options
+        E = int(opts.get("episodes_per_epoch", 1))
+        epochs = max(request.eps // E, 1)
+        acfg = rl_baselines.ACConfig(
+            algo=self.algo, epochs=epochs, episodes_per_epoch=E,
+            lr=opts.get("lr", 1e-3),
+            discount=opts.get("discount", 0.9),
+            gae_lambda=opts.get("gae_lambda", 0.95),
+            clip_eps=opts.get("clip_eps", 0.2),
+            ppo_updates=opts.get("ppo_updates", 4),
+            value_coef=opts.get("value_coef", 0.5),
+            entropy_coef=opts.get("entropy_coef", 0.01),
+            seed=request.seed)
+        pcfg = _policy_config(request.env, opts)
+        state, hist = rl_baselines.run_ac_search(wl, request.env, acfg, pcfg)
+        env = env_lib.make_env(wl, request.env)
+        pe, kt, df = reinforce.solution_arrays(state, env)
+        trace = types.expand_trace(hist["best_value"], E)
+        return _outcome(
+            request, self.name, state.best_value, np.asarray(pe),
+            np.asarray(kt), np.asarray(df), trace, t0,
+            extras={"epochs": epochs, "history": hist})
+
+
+@register("a2c")
+class A2COptimizer(_ActorCriticOptimizer):
+    algo = "a2c"
+    name = "a2c"
+
+
+@register("ppo2", aliases=("ppo",))
+class PPO2Optimizer(_ActorCriticOptimizer):
+    algo = "ppo2"
+    name = "ppo2"

@@ -7,6 +7,12 @@
   baselines    -- grid / random / simulated annealing / Bayesian opt
   rl_baselines -- A2C / PPO2 actor-critic baselines
   search       -- two-stage orchestration + LS per-layer study
+
+These are the engines.  The canonical user-facing entry point is the
+unified optimizer API in :mod:`repro.api` -- one registry
+(``get_optimizer("reinforce"|"ga"|"sa"|...)``) and one
+``SearchRequest``/``SearchOutcome`` schema for every method; the functions
+here remain callable directly as thin legacy entry points.
 """
 from repro.core.env import EnvConfig, make_env
 from repro.core.reinforce import ReinforceConfig, run_search

@@ -50,12 +50,13 @@ def random_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
         genomes = jax.random.randint(k, (n, N, 2), 0, ecfg.levels)
         fit, pe, kt = eval_b(genomes)
         fit = np.asarray(fit)
+        # Seed the trace with the best *before* this batch so no sample is
+        # credited ahead of being drawn (keeps convergence plots honest).
+        hist.append(np.minimum(np.minimum.accumulate(fit), best))
         i = int(fit.argmin())
         if fit[i] < best:
             best, best_pe, best_kt = float(fit[i]), np.asarray(pe[i]), \
                 np.asarray(kt[i])
-        running = np.minimum.accumulate(np.minimum(fit, best))
-        hist.append(running)
         done += n
     return BaselineResult(best, best_pe, best_kt, np.concatenate(hist), eps)
 
@@ -89,11 +90,11 @@ def grid_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
         genomes = np.minimum(digits.reshape(n, N, 2), ecfg.levels - 1)
         fit, pe, kt = eval_b(jnp.asarray(genomes))
         fit = np.asarray(fit)
+        hist.append(np.minimum(np.minimum.accumulate(fit), best))
         i = int(fit.argmin())
         if fit[i] < best:
             best, best_pe, best_kt = float(fit[i]), np.asarray(pe[i]), \
                 np.asarray(kt[i])
-        hist.append(np.minimum.accumulate(np.minimum(fit, best)))
         done += n
     return BaselineResult(best, best_pe, best_kt, np.concatenate(hist), eps)
 
@@ -213,9 +214,9 @@ def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
         fit = np.asarray(fit, dtype=np.float64)
         X = np.concatenate([X, pick], axis=0)
         y = np.concatenate([y, fit])
-        best_so_far = min(hist[-1], fit.min()) if hist else fit.min()
-        hist.extend(np.minimum.accumulate(
-            np.minimum(fit, best_so_far)).tolist())
+        prev_best = hist[-1] if hist else np.inf
+        hist.extend(np.minimum(
+            np.minimum.accumulate(fit), prev_best).tolist())
 
     i = int(np.argmin(np.where(np.isfinite(y), y, np.inf)))
     best = float(y[i]) if np.isfinite(y[i]) else float("inf")

@@ -219,11 +219,14 @@ def run_search(workload, ecfg: env_lib.EnvConfig,
                rcfg: ReinforceConfig = ReinforceConfig(),
                pcfg: policy_lib.PolicyConfig | None = None,
                state: SearchState | None = None,
-               chunk: int = 500):
+               chunk: int = 500,
+               on_chunk=None):
     """Full stage-1 search.  Returns (state, history dict of (epochs,) arrays).
 
     Runs in jitted lax.scan chunks so long searches can checkpoint between
-    chunks (launch/search.py does).
+    chunks.  ``on_chunk(state, chunk_history, epochs_done)`` fires after each
+    chunk (the unified API streams progress through it); the compiled epoch
+    function is reused across chunks either way.
     """
     env = env_lib.make_env(workload, ecfg)
     if pcfg is None:
@@ -243,8 +246,11 @@ def run_search(workload, ecfg: env_lib.EnvConfig,
     while done < rcfg.epochs:
         n = min(chunk, rcfg.epochs - done)
         state, metrics = run_chunk(state, n)
-        history.append(jax.tree.map(jax.device_get, metrics))
+        h = jax.tree.map(jax.device_get, metrics)
+        history.append(h)
         done += n
+        if on_chunk is not None:
+            on_chunk(state, h, done)
     import numpy as np
 
     hist = {k: np.concatenate([h[k] for h in history]) for k in history[0]}

@@ -1,8 +1,9 @@
 """ConfuciuX two-stage orchestration (Fig. 3): RL global search -> GA local
 fine-tune, plus the LS per-layer analysis of SIV-B.
 
-This is the user-facing entry point the launcher (launch/search.py) and
-examples drive.
+The launcher, examples and benchmarks now drive this through the unified
+optimizer API (``repro.api``, method name "two_stage"); ``confuciux_search``
+remains the underlying engine and a thin legacy entry point.
 """
 from __future__ import annotations
 
@@ -40,15 +41,22 @@ def confuciux_search(workload, ecfg: env_lib.EnvConfig,
                      rcfg: reinforce.ReinforceConfig = None,
                      gcfg: ga_lib.LocalGAConfig = None,
                      pcfg: policy_lib.PolicyConfig = None,
-                     fine_tune: bool = True) -> SearchResult:
-    """Run the full two-stage ConfuciuX pipeline on a workload."""
+                     fine_tune: bool = True,
+                     chunk: int = 500,
+                     on_chunk=None) -> SearchResult:
+    """Run the full two-stage ConfuciuX pipeline on a workload.
+
+    chunk / on_chunk are forwarded to the stage-1 ``reinforce.run_search``
+    so callers (the unified API) can stream global-search progress live.
+    """
     if isinstance(workload, str):
         workload = workloads_lib.get_workload(workload)
     rcfg = rcfg or reinforce.ReinforceConfig()
     gcfg = gcfg or ga_lib.LocalGAConfig()
     t0 = time.time()
 
-    state, hist = reinforce.run_search(workload, ecfg, rcfg, pcfg)
+    state, hist = reinforce.run_search(workload, ecfg, rcfg, pcfg,
+                                       chunk=chunk, on_chunk=on_chunk)
     env = env_lib.make_env(workload, ecfg)
     pe1, kt1, df1 = reinforce.solution_arrays(state, env)
     stage1 = float(state.best_value)

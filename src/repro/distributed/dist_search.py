@@ -16,18 +16,31 @@ Three shard_map building blocks (DESIGN.md S3/S6):
 
 Island-model GA: each device evolves its own subpopulation and the best
 genomes are exchanged (all_gather) every ``exchange_every`` generations.
+
+Unified-API wrappers (registered in the ``repro.api`` optimizer registry):
+
+  * ``fanout``         -- seed-parallel fan-out of ANY registered optimizer:
+    n shards run the inner method with distinct seeds and the results are
+    merged (best value wins; the trace is the elementwise min, i.e. the
+    wall-clock view of the parallel ensemble).
+  * ``dist_reinforce`` -- the episode-parallel shard_map REINFORCE above,
+    exposed through the same SearchRequest/SearchOutcome schema.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.api import registry as api_registry
+from repro.api import types as api_types
 from repro.core import env as env_lib
 from repro.core import policy as policy_lib
 from repro.core import reinforce
@@ -172,8 +185,6 @@ def run_distributed_search(workload, ecfg: env_lib.EnvConfig, mesh,
     straggler_mask: optional bool array of shape (n_devices,) -- False marks
     a simulated dead/slow shard whose contribution is dropped.
     """
-    import numpy as np
-
     env = env_lib.make_env(workload, ecfg)
     if pcfg is None:
         pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, mix=ecfg.mix,
@@ -200,3 +211,86 @@ def run_distributed_search(workload, ecfg: env_lib.EnvConfig, mesh,
             history[k].append(float(metrics[k]))
     history = {k: np.asarray(v) for k, v in history.items()}
     return state, history
+
+
+# ---------------------------------------------------------------------------
+# Unified-API wrappers.
+# ---------------------------------------------------------------------------
+@api_registry.register("fanout")
+class FanoutOptimizer:
+    """Seed-parallel fan-out of any registered optimizer.
+
+    options: ``inner`` (registry name, default "reinforce"), ``n_shards``
+    (default 4), ``inner_options`` (passed to each shard).  Each shard keeps
+    the full ``eps`` budget -- this models n workers searching in parallel,
+    so the merged trace is the wall-clock best-so-far of the ensemble and
+    total samples are ``n_shards * eps`` (reported in extras).  On a real
+    deployment each shard maps to one host/device; here they run in turn.
+    """
+
+    name = "fanout"
+
+    def run(self, request: api_types.SearchRequest) -> api_types.SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        inner = opts.get("inner", "reinforce")
+        n_shards = int(opts.get("n_shards", 4))
+        inner_opts = dict(opts.get("inner_options", {}))
+        if isinstance(api_registry.get_optimizer(inner), FanoutOptimizer):
+            raise ValueError("fanout cannot nest itself as the inner method")
+        shards = []
+        for s in range(n_shards):
+            sub = dataclasses.replace(
+                request, method=inner, options=inner_opts,
+                seed=request.seed + s, on_progress=None)
+            shards.append(api_registry.get_optimizer(inner).run(sub))
+        best = min(shards, key=lambda o: o.best_value)
+        trace = np.min(np.stack([o.history for o in shards]), axis=0)
+        return api_types.build_outcome(
+            request, self.name, best.best_value, best.pe, best.kt, best.df,
+            trace, t0,
+            extras={"inner": inner, "n_shards": n_shards,
+                    "total_samples": n_shards * request.eps,
+                    "shard_best_values": [o.best_value for o in shards],
+                    "best_seed": best.seed})
+
+
+@api_registry.register("dist_reinforce")
+class DistributedReinforceOptimizer:
+    """Episode-parallel REINFORCE across every device of a mesh.
+
+    options: ``mesh`` (a jax Mesh; default: one axis over all local devices),
+    ``episodes_per_device``, ``compress_pod_axis``, ``straggler_mask``,
+    ``lr``.  One epoch consumes ``episodes_per_device * n_devices`` samples.
+    """
+
+    name = "dist_reinforce"
+
+    def run(self, request: api_types.SearchRequest) -> api_types.SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        mesh = opts.get("mesh")
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        E = int(opts.get("episodes_per_device", 1))
+        per_epoch = max(E * n_dev, 1)
+        rcfg = reinforce.ReinforceConfig(
+            epochs=max(request.eps // per_epoch, 1),
+            lr=opts.get("lr", 3e-3), seed=request.seed)
+        dcfg = DistConfig(
+            episodes_per_device=E,
+            compress_pod_axis=bool(opts.get("compress_pod_axis", False)),
+            seed=request.seed)
+        wl = request.resolve_workload()
+        state, hist = run_distributed_search(
+            wl, request.env, mesh, rcfg, dcfg,
+            straggler_mask=opts.get("straggler_mask"))
+        env = env_lib.make_env(wl, request.env)
+        pe, kt, df = reinforce.solution_arrays(state, env)
+        trace = api_types.expand_trace(hist["best_value"], per_epoch)
+        return api_types.build_outcome(
+            request, self.name, state.best_value, np.asarray(pe),
+            np.asarray(kt), np.asarray(df), trace, t0,
+            extras={"epochs": rcfg.epochs, "devices": n_dev,
+                    "history": hist})

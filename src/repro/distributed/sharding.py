@@ -68,6 +68,9 @@ def assign_spec(mesh, shape, prefs) -> P:
                 chosen = ax
                 used.update(names)
                 break
+        # Normalize 1-tuples to bare names so specs compare canonically.
+        if isinstance(chosen, tuple) and len(chosen) == 1:
+            chosen = chosen[0]
         spec.append(chosen)
     return P(*spec)
 

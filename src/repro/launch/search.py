@@ -1,15 +1,21 @@
-"""ConfuciuX search launcher: the paper's workflow as a CLI.
+"""ConfuciuX search launcher: any registered optimizer as a CLI.
 
     PYTHONPATH=src python -m repro.launch.search --workload mobilenet_v2 \
         --objective latency --constraint area --platform iot \
         --dataflow dla --epochs 5000 --out results/search.json
 
+    # Any other search method through the same flags:
+    PYTHONPATH=src python -m repro.launch.search --workload mnasnet \
+        --method sa --epochs 2000
+
     # Assigned architecture as the search target (LLM serving workload):
     PYTHONPATH=src python -m repro.launch.search --arch qwen3-32b --tokens 512
 
 Inputs mirror Fig. 3: target model, deployment scenario (LS/LP), objective
-(latency/energy), platform constraint (Table II).  Output: the optimized
-per-layer (PE, Buffer[, dataflow]) assignment + both stage values.
+(latency/energy), platform constraint (Table II).  ``--method`` picks any
+optimizer from the unified registry (repro.api); the default is the paper's
+two-stage pipeline.  Output: the optimized per-layer (PE, Buffer[,
+dataflow]) assignment in one schema for every method.
 """
 from __future__ import annotations
 
@@ -20,12 +26,46 @@ import sys
 
 import numpy as np
 
+from repro import api
 from repro.core import env as env_lib
-from repro.core import ga as ga_lib
-from repro.core import reinforce, search
 from repro.costmodel import dataflows as dfl
 from repro.costmodel import workloads as workloads_lib
 from repro.costmodel.layers import total_macs
+
+
+def build_request(args) -> api.SearchRequest:
+    """Translate CLI flags into the canonical SearchRequest."""
+    if args.workload:
+        wl = workloads_lib.get_workload(args.workload)
+    else:
+        from repro.costmodel import arch_workloads
+        wl = arch_workloads.lower_arch(args.arch, tokens=args.tokens)
+
+    mix = args.dataflow == "mix"
+    ecfg = env_lib.EnvConfig(
+        objective=args.objective, constraint=args.constraint,
+        platform=args.platform, scenario=args.scenario,
+        dataflow=(dfl.DLA if mix
+                  else dfl.DATAFLOW_NAMES.index(args.dataflow)),
+        mix=mix, levels=args.levels)
+    # GA flags feed both the two_stage fine-tuner (nested "ga" dict) and
+    # --method ga (top-level keys); unset flags keep each method's defaults.
+    ga_opts = {k: v for k, v in (("population", args.ga_population),
+                                 ("generations", args.ga_generations))
+               if v is not None}
+    options = {
+        "episodes_per_epoch": args.episodes,
+        "fine_tune": not args.no_finetune,
+        "ga": ga_opts,
+        **ga_opts,
+    }
+    if args.lr is not None:      # unset keeps each method's own default
+        options["lr"] = args.lr
+    # eps counts whole-model evaluations; --epochs keeps the paper's
+    # epoch semantics (one epoch = --episodes samples for the RL family).
+    return api.SearchRequest(
+        workload=wl, env=ecfg, eps=args.epochs * args.episodes,
+        seed=args.seed, method=args.method, options=options)
 
 
 def main(argv=None):
@@ -37,6 +77,9 @@ def main(argv=None):
                      "lowered to its per-layer GEMM/CONV descriptors)")
     ap.add_argument("--tokens", type=int, default=256,
                     help="tokens per forward for --arch lowering")
+    ap.add_argument("--method", default="two_stage",
+                    help="search method from the unified registry "
+                    f"(one of {', '.join(api.list_optimizers())})")
     ap.add_argument("--objective", default="latency",
                     choices=["latency", "energy"])
     ap.add_argument("--constraint", default="area",
@@ -47,78 +90,86 @@ def main(argv=None):
     ap.add_argument("--dataflow", default="dla",
                     choices=["dla", "eye", "shi", "mix"])
     ap.add_argument("--levels", type=int, default=12, choices=[10, 12, 14])
-    ap.add_argument("--epochs", type=int, default=5000)
+    ap.add_argument("--epochs", type=int, default=5000,
+                    help="sample budget Eps (in epochs of --episodes)")
     ap.add_argument("--episodes", type=int, default=1,
                     help="episodes per epoch (1 = the paper's setting)")
-    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default: 3e-3 for reinforce/two_stage, "
+                    "1e-3 for a2c/ppo2")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-finetune", action="store_true",
-                    help="skip the stage-2 local GA")
-    ap.add_argument("--ga-generations", type=int, default=2000)
-    ap.add_argument("--ga-population", type=int, default=20)
+                    help="skip the stage-2 local GA (two_stage only)")
+    ap.add_argument("--ga-generations", type=int, default=None,
+                    help="default: 2000 for the two_stage fine-tuner, "
+                    "eps/population for --method ga")
+    ap.add_argument("--ga-population", type=int, default=None,
+                    help="default: 20 for the two_stage fine-tuner, "
+                    "100 for --method ga")
+    ap.add_argument("--progress-every", type=int, default=0,
+                    help="stream best-so-far every N samples (0 = off)")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
-    if args.workload:
-        wl = workloads_lib.get_workload(args.workload)
-        target = args.workload
-    else:
-        from repro.costmodel import arch_workloads
-        wl = arch_workloads.lower_arch(args.arch, tokens=args.tokens)
-        target = args.arch
+    try:
+        api.get_optimizer(args.method)
+    except KeyError as e:
+        ap.error(e.args[0])
 
-    mix = args.dataflow == "mix"
-    ecfg = env_lib.EnvConfig(
-        objective=args.objective, constraint=args.constraint,
-        platform=args.platform, scenario=args.scenario,
-        dataflow=(dfl.DLA if mix
-                  else dfl.DATAFLOW_NAMES.index(args.dataflow)),
-        mix=mix, levels=args.levels)
-    rcfg = reinforce.ReinforceConfig(
-        epochs=args.epochs, episodes_per_epoch=args.episodes,
-        lr=args.lr, seed=args.seed)
-    gcfg = ga_lib.LocalGAConfig(population=args.ga_population,
-                                generations=args.ga_generations,
-                                seed=args.seed)
+    request = build_request(args)
+    wl = request.workload
+    target = args.workload or args.arch
+    print(f"target={target} method={args.method} layers={len(wl)} "
+          f"macs={total_macs(wl)/1e6:.0f}M obj={args.objective} "
+          f"cstr={args.constraint}:{args.platform} df={args.dataflow} "
+          f"scenario={args.scenario} eps={request.eps}", flush=True)
 
-    print(f"target={target} layers={len(wl)} macs={total_macs(wl)/1e6:.0f}M "
-          f"obj={args.objective} cstr={args.constraint}:{args.platform} "
-          f"df={args.dataflow} scenario={args.scenario}", flush=True)
+    if args.progress_every > 0:
+        request.progress_every = args.progress_every
+        request.on_progress = lambda t: print(
+            f"  [{t.step}/{request.eps}] best={t.best_value:.4e}",
+            flush=True)
 
-    res = search.confuciux_search(wl, ecfg, rcfg, gcfg,
-                                  fine_tune=not args.no_finetune)
+    out = api.run_search(request)
 
+    stage1 = out.extras.get("stage1_value")
+    initial = out.extras.get("initial_valid_value")
     rec = {
-        "target": target, "objective": args.objective,
+        "target": target, "method": out.method,
+        "objective": args.objective,
         "constraint": args.constraint, "platform": args.platform,
         "scenario": args.scenario, "dataflow": args.dataflow,
-        "epochs": args.epochs,
-        "initial_valid_value": res.initial_valid_value,
-        "stage1_value": res.stage1_value,
-        "best_value": res.best_value,
+        "eps": out.eps, "epochs": args.epochs, "seed": out.seed,
+        "best_value": out.best_value,
+        "feasible": out.feasible,
+        "stage1_value": stage1,
+        "initial_valid_value": initial,
         "stage1_improvement_pct": (
-            100.0 * (1 - res.stage1_value / res.initial_valid_value)
-            if np.isfinite(res.initial_valid_value) else None),
+            100.0 * (1 - stage1 / initial)
+            if initial is not None and np.isfinite(initial) else None),
         "stage2_improvement_pct": (
-            100.0 * (1 - res.best_value / res.stage1_value)
-            if np.isfinite(res.stage1_value) else None),
-        "wall_seconds": round(res.wall_seconds, 2),
-        "assignment": {
-            "pe": np.asarray(res.pe).astype(int).tolist(),
-            "kt": np.asarray(res.kt).astype(int).tolist(),
-            "dataflow": [dfl.DATAFLOW_NAMES[int(d)] for d in res.df],
-            "layers": [l.name or f"layer{i}" for i, l in enumerate(wl)],
-        },
+            100.0 * (1 - out.best_value / stage1)
+            if stage1 is not None and np.isfinite(stage1) else None),
+        "samples_to_convergence": out.samples_to_convergence,
+        "wall_seconds": round(out.wall_seconds, 2),
     }
+    if out.feasible:
+        rec["assignment"] = {
+            "pe": np.asarray(out.pe).astype(int).tolist(),
+            "kt": np.asarray(out.kt).astype(int).tolist(),
+            "dataflow": [dfl.DATAFLOW_NAMES[int(d)] for d in out.df],
+            "layers": [l.name or f"layer{i}" for i, l in enumerate(wl)],
+        }
     print(json.dumps({k: rec[k] for k in
-                      ("best_value", "stage1_value", "initial_valid_value",
+                      ("method", "best_value", "stage1_value",
+                       "initial_valid_value", "samples_to_convergence",
                        "wall_seconds")}), flush=True)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(rec, f, indent=1)
         print(f"wrote {args.out}", flush=True)
-    return 0 if np.isfinite(res.best_value) else 1
+    return 0 if out.feasible else 1
 
 
 if __name__ == "__main__":

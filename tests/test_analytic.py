@@ -20,6 +20,15 @@ from repro.models import lm
 from repro.training import optim
 
 
+def _compiled_flops(compiled) -> float:
+    """jax's Compiled.cost_analysis() returns a dict in newer versions and a
+    one-element list of dicts in older ones -- accept both."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
 def _unrolled_flops(cfg, B, T, kind):
     lm.UNROLL_STACKS = True
     try:
@@ -47,7 +56,7 @@ def _unrolled_flops(cfg, B, T, kind):
             tok = jax.ShapeDtypeStruct((B, T), jnp.int32)
             c = jax.jit(lambda p, t: lm.prefill(p, cfg, t)).lower(
                 sds, tok).compile()
-        return float(c.cost_analysis()["flops"])
+        return _compiled_flops(c)
     finally:
         lm.UNROLL_STACKS = False
 
@@ -88,8 +97,8 @@ def test_xla_undercounts_scans():
         batch = {"tokens": jax.ShapeDtypeStruct((4, 256), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((4, 256), jnp.int32)}
         step = functools.partial(lm.train_step, cfg=cfg, optimizer=opt)
-        return float(jax.jit(step).lower(sds[0], sds[1], batch)
-                     .compile().cost_analysis()["flops"])
+        return _compiled_flops(
+            jax.jit(step).lower(sds[0], sds[1], batch).compile())
 
     assert flops_at(8) / flops_at(4) < 1.5  # NOT ~2x: body counted once
 

@@ -1,0 +1,166 @@
+"""Unified optimizer API: registry round-trip, legacy parity, schema."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import baselines, env as env_lib, reinforce
+from repro.costmodel.layers import LayerSpec
+
+EXPECTED_METHODS = {"reinforce", "two_stage", "ga", "sa", "bo", "random",
+                    "grid", "a2c", "ppo2", "fanout", "dist_reinforce"}
+
+
+def _wl():
+    return [LayerSpec.conv(32, 16, 28, 28, 3, 3),
+            LayerSpec.dwconv(64, 14, 14, 3, 3),
+            LayerSpec.gemm(64, 256, 128)]
+
+
+ECFG = env_lib.EnvConfig(platform="cloud")
+
+
+def _req(method, eps=200, seed=0, **kw):
+    return api.SearchRequest(workload=_wl(), env=ECFG, eps=eps, seed=seed,
+                             method=method, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip.
+# ---------------------------------------------------------------------------
+def test_registry_lists_every_method():
+    assert EXPECTED_METHODS <= set(api.list_optimizers())
+
+
+def test_every_name_resolves_to_an_optimizer():
+    for name in api.list_optimizers():
+        opt = api.get_optimizer(name)
+        assert opt.name == name
+        assert callable(opt.run)
+
+
+def test_aliases_resolve_to_canonical_methods():
+    assert api.get_optimizer("ppo").name == "ppo2"
+    assert api.get_optimizer("bayes").name == "bo"
+    assert api.get_optimizer("conx").name == "two_stage"
+
+
+def test_unknown_name_raises_keyerror_listing_methods():
+    with pytest.raises(KeyError, match="no_such_method"):
+        api.get_optimizer("no_such_method")
+
+
+# ---------------------------------------------------------------------------
+# Parity with the legacy entry points (fixed seed, small eps).
+# ---------------------------------------------------------------------------
+def test_random_parity_with_legacy():
+    out = api.run_search(_req("random", eps=200, seed=3))
+    legacy = baselines.random_search(_wl(), ECFG, eps=200, seed=3)
+    assert out.best_value == float(legacy.best_value)
+    np.testing.assert_array_equal(out.pe, legacy.best_pe)
+
+
+def test_sa_parity_with_legacy():
+    out = api.run_search(_req("sa", eps=150, seed=5))
+    legacy = baselines.simulated_annealing(
+        _wl(), ECFG, eps=150, cfg=baselines.SAConfig(seed=5))
+    assert out.best_value == float(legacy.best_value)
+
+
+def test_reinforce_parity_with_legacy():
+    out = api.run_search(_req("reinforce", eps=80, seed=7))
+    state, hist = reinforce.run_search(
+        _wl(), ECFG,
+        reinforce.ReinforceConfig(epochs=80, episodes_per_epoch=1, seed=7))
+    assert out.best_value == pytest.approx(float(state.best_value))
+    np.testing.assert_allclose(out.history, hist["best_value"])
+
+
+# ---------------------------------------------------------------------------
+# Outcome schema.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method,eps", [
+    ("random", 150), ("grid", 150), ("sa", 150), ("ga", 150), ("bo", 150),
+    ("reinforce", 60), ("two_stage", 60),
+])
+def test_outcome_schema(method, eps):
+    out = api.run_search(_req(method, eps=eps))
+    assert out.method == method
+    assert len(out.history) == eps
+    finite = out.history[np.isfinite(out.history)]
+    # Monotone non-increasing best-so-far; inf prefix allowed.
+    assert np.all(np.diff(finite) <= 1e-9)
+    assert out.history[-1] == pytest.approx(out.best_value)
+    assert out.pe.shape == out.kt.shape == out.df.shape == (3,)
+    assert 1 <= out.samples_to_convergence <= eps
+    assert out.wall_seconds >= 0
+    assert out.feasible == bool(np.isfinite(out.best_value))
+
+
+def test_expand_trace_credits_spans_honestly():
+    """A span's best lands on its LAST sample; earlier samples inherit the
+    previous span's best (no look-ahead, mirroring the baselines fix)."""
+    from repro.api import types
+    tr = types.expand_trace([5.0, 3.0, 4.0], span=4)
+    assert len(tr) == 12
+    assert np.all(np.isinf(tr[:3])) and tr[3] == 5.0
+    assert np.all(tr[4:7] == 5.0) and tr[7] == 3.0
+    assert np.all(tr[8:] == 3.0)  # best-so-far, span 3 never improved
+
+
+def test_fanout_rejects_self_nesting():
+    with pytest.raises(ValueError, match="nest itself"):
+        api.run_search(_req("fanout", eps=50, options={"inner": "fanout"}))
+
+
+def test_two_stage_outcome_carries_stage_breakdown():
+    out = api.run_search(_req("two_stage", eps=80,
+                              options={"ga": {"generations": 60}}))
+    assert out.best_value <= out.extras["stage1_value"]
+    assert out.extras["stage1_value"] <= out.extras["initial_valid_value"]
+    assert len(out.history) == 80
+
+
+def test_one_shared_options_dict_works_across_methods():
+    """Adapters ignore options they don't understand (method sweeps)."""
+    opts = {"population": 30, "temperature": 5.0, "episodes_per_epoch": 2}
+    for method in ("ga", "sa", "random"):
+        out = api.run_search(_req(method, eps=100, options=opts))
+        assert len(out.history) == 100
+
+
+# ---------------------------------------------------------------------------
+# Progress callbacks.
+# ---------------------------------------------------------------------------
+def test_progress_callback_streams_trials():
+    trials = []
+    out = api.run_search(_req("random", eps=200, on_progress=trials.append,
+                              progress_every=50))
+    assert len(trials) == 4
+    steps = [t.step for t in trials]
+    assert steps == sorted(steps) and steps[-1] == 200
+    assert trials[-1].best_value == pytest.approx(out.best_value)
+
+
+def test_reinforce_streaming_matches_single_shot():
+    """Chunked (streaming) runs are bit-identical to one-shot runs."""
+    plain = api.run_search(_req("reinforce", eps=60, seed=11))
+    trials = []
+    streamed = api.run_search(_req("reinforce", eps=60, seed=11,
+                                   on_progress=trials.append,
+                                   progress_every=20))
+    assert streamed.best_value == pytest.approx(plain.best_value)
+    assert len(trials) == 3
+    np.testing.assert_allclose(streamed.history, plain.history)
+
+
+# ---------------------------------------------------------------------------
+# Distributed wrappers.
+# ---------------------------------------------------------------------------
+def test_fanout_merges_shards():
+    out = api.run_search(_req(
+        "fanout", eps=100,
+        options={"inner": "random", "n_shards": 3}))
+    shard_bests = out.extras["shard_best_values"]
+    assert len(shard_bests) == 3
+    assert out.best_value == min(shard_bests)
+    assert len(out.history) == 100

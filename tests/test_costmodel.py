@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # degrade property tests to skips, not collection errors
+    from hypothesis_stub import given, settings, st
 
 from repro.costmodel import (CONV, DLA, EYE, GEMM, KT_LEVELS, PE_LEVELS, SHI,
                              evaluate, layers_to_array, model_cost, workloads)

@@ -1,8 +1,11 @@
 """GA (both stages) and the classic baselines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # degrade property tests to skips, not collection errors
+    from hypothesis_stub import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -93,8 +96,11 @@ def test_bayes_opt_runs_and_improves():
 
 
 def test_ga_solution_quality_vs_random():
-    """GA should beat random search at equal sample budget (loose cstr)."""
+    """GA should beat random search at equal sample budget (loose cstr).
+
+    2000 samples: below that the comparison is noise on this toy workload.
+    """
     ga_res = ga_lib.baseline_ga(
-        _wl(), ECFG, ga_lib.GAConfig(population=50, generations=20))
-    rnd = baselines.random_search(_wl(), ECFG, eps=1000)
+        _wl(), ECFG, ga_lib.GAConfig(population=50, generations=40))
+    rnd = baselines.random_search(_wl(), ECFG, eps=2000)
     assert float(ga_res.best_value) <= rnd.best_value * 1.10

@@ -1,8 +1,11 @@
 """Hypothesis property tests on system-level invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # degrade property tests to skips, not collection errors
+    from hypothesis_stub import given, settings, st
 
 from repro.core import env as env_lib
 from repro.core import ga as ga_lib
