@@ -1,0 +1,92 @@
+"""Fanout backend scaling: serial vs threads vs device at 4 shards.
+
+The ``fanout`` optimizer runs n independent seeds of an inner search and
+merges the best -- the paper's sample-efficiency claim evaluated as a
+wall-clock ensemble.  This benchmark measures how the three execution
+backends spend that wall-clock for the two JAX-native inners (reinforce,
+ga):
+
+  * serial  -- n compiles + n sequential executions (the PR-1 baseline)
+  * threads -- n compiles + n executions, overlapped by host threads
+  * device  -- ONE compile of a shard_map'd program + all shards executing
+               concurrently on the forced-host CPU devices
+
+All backends produce bit-identical merged outcomes (asserted), so the only
+difference is time.  Subprocesses own the XLA device-count flag, exactly
+like bench_dist_search.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks import common
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = """
+import json, time
+from repro import api
+from repro.costmodel import workloads
+
+wl = workloads.mobilenet_v2()[:12]
+req = dict(workload=wl, env=api.EnvConfig(platform="iot"),
+           eps={eps}, seed=0, method="fanout")
+res = {{}}
+for backend in ("serial", "threads", "device"):
+    t0 = time.time()
+    out = api.run_search(api.SearchRequest(
+        **req, options={{"inner": "{inner}", "n_shards": {shards},
+                         "backend": backend,
+                         "inner_options": {inner_opts}}}))
+    res[backend] = {{"seconds": time.time() - t0,
+                     "best_value": out.best_value,
+                     "history_tail": float(out.history[-1])}}
+    assert out.extras["backend"] == backend
+# All three must merge to the same ensemble result.
+assert len({{r["best_value"] for r in res.values()}}) == 1, res
+print(json.dumps(res))
+"""
+
+
+def _run(inner, eps, shards, inner_opts):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={shards}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = _CODE.format(inner=inner, eps=eps, shards=shards,
+                        inner_opts=json.dumps(inner_opts))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1800, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(budget_name: str = "quick") -> dict:
+    eps = 300 if budget_name == "quick" else 2000
+    shards = 4
+    payload = {"n_shards": shards, "eps": eps}
+    rows = []
+    for inner, iopts in [("reinforce", {}), ("ga", {"population": 50})]:
+        r = _run(inner, eps, shards, iopts)
+        payload[inner] = r
+        base = r["serial"]["seconds"]
+        for backend in ("serial", "threads", "device"):
+            rows.append([inner, backend, r[backend]["seconds"],
+                         base / r[backend]["seconds"],
+                         r[backend]["best_value"]])
+    common.print_table(
+        f"Fanout backends ({shards} shards, eps={eps}/shard, identical "
+        f"merged outcomes)",
+        ["inner", "backend", "seconds", "speedup vs serial", "best value"],
+        rows)
+    payload["speedup_device"] = {
+        inner: payload[inner]["serial"]["seconds"]
+        / payload[inner]["device"]["seconds"]
+        for inner in ("reinforce", "ga")}
+    return payload
+
+
+if __name__ == "__main__":
+    common.save_json("fanout_backends", run())

@@ -19,6 +19,10 @@ METHODS = [
     ("ppo2", {}),
     ("ga", {"population": 100}),
     ("random", {}),
+    # 4 parallel workers, merged wall-clock view: at trace index i the
+    # ensemble has consumed 4*i samples.  backend=auto picks the parallel
+    # path the host supports (device when >= 4 local devices, else threads).
+    ("fanout", {"inner": "reinforce", "n_shards": 4, "backend": "auto"}),
 ]
 
 

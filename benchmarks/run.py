@@ -28,6 +28,7 @@ BENCHES = [
     ("fig7_convergence", "benchmarks.bench_fig7_convergence"),
     ("costmodel_throughput", "benchmarks.bench_costmodel_throughput"),
     ("dist_search", "benchmarks.bench_dist_search"),
+    ("fanout_backends", "benchmarks.bench_fanout_backends"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

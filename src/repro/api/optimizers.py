@@ -104,6 +104,20 @@ class BayesOptOptimizer:
                         res.best_kt, None, res.history, t0)
 
 
+def _ga_cfg(request: SearchRequest) -> ga_lib.GAConfig:
+    """One GAConfig derivation for the serial adapter AND the fanout device
+    backend -- a default drifting between them would silently break the
+    bit-identical-backends guarantee."""
+    opts = request.options
+    pop = int(opts.get("population", 100))
+    gens = int(opts.get("generations", 0)) or max(request.eps // pop, 1)
+    return ga_lib.GAConfig(
+        population=pop, generations=gens,
+        mutation_rate=opts.get("mutation_rate", 0.05),
+        crossover_rate=opts.get("crossover_rate", 0.05),
+        seed=request.seed, use_kernel=opts.get("use_kernel"))
+
+
 @register("ga")
 class GeneticAlgorithmOptimizer:
     """Baseline GA; ``eps`` buys population * generations individuals."""
@@ -112,23 +126,17 @@ class GeneticAlgorithmOptimizer:
 
     def run(self, request: SearchRequest) -> SearchOutcome:
         t0 = time.time()
-        opts = request.options
-        pop = int(opts.get("population", 100))
-        gens = int(opts.get("generations", 0)) or max(request.eps // pop, 1)
-        cfg = ga_lib.GAConfig(
-            population=pop, generations=gens,
-            mutation_rate=opts.get("mutation_rate", 0.05),
-            crossover_rate=opts.get("crossover_rate", 0.05),
-            seed=request.seed)
+        cfg = _ga_cfg(request)
         res = ga_lib.baseline_ga(request.resolve_workload(), request.env, cfg)
-        trace = types.expand_trace(res.history, pop)
+        trace = types.expand_trace(res.history, cfg.population)
         return _outcome(request, self.name, res.best_value, res.best_pe,
                         res.best_kt, res.best_df, trace, t0,
-                        extras={"generations": gens, "population": pop})
+                        extras={"generations": cfg.generations,
+                                "population": cfg.population})
 
 
 # ---------------------------------------------------------------------------
-# RL family (chunked engines; reinforce/two_stage stream live).
+# RL family (chunked engines; all four stream live through on_chunk).
 # ---------------------------------------------------------------------------
 def _reinforce_cfg(request: SearchRequest):
     opts = request.options
@@ -246,14 +254,18 @@ class _ActorCriticOptimizer:
             entropy_coef=opts.get("entropy_coef", 0.01),
             seed=request.seed)
         pcfg = _policy_config(request.env, opts)
-        state, hist = rl_baselines.run_ac_search(wl, request.env, acfg, pcfg)
+        chunk, on_chunk = _chunk_args(request, E)
+        state, hist = rl_baselines.run_ac_search(wl, request.env, acfg, pcfg,
+                                                 chunk=chunk,
+                                                 on_chunk=on_chunk)
         env = env_lib.make_env(wl, request.env)
         pe, kt, df = reinforce.solution_arrays(state, env)
         trace = types.expand_trace(hist["best_value"], E)
         return _outcome(
             request, self.name, state.best_value, np.asarray(pe),
             np.asarray(kt), np.asarray(df), trace, t0,
-            extras={"epochs": epochs, "history": hist})
+            extras={"epochs": epochs, "history": hist},
+            streamed=request.on_progress is not None)
 
 
 @register("a2c")

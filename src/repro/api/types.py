@@ -29,11 +29,18 @@ class Trial(NamedTuple):
     ``step`` is the number of samples (whole-model evaluations) consumed so
     far; ``value`` the best objective inside the reported span; ``best_value``
     the best-so-far across the whole run (inf until a feasible point shows).
+
+    ``shard`` tags multi-worker streams: the ``fanout`` optimizer merges its
+    shards' live traces into one callback and stamps each chunk with the
+    shard index it came from (``best_value`` is then the *ensemble*
+    best-so-far).  Single-worker optimizers leave it None; ``step`` stays
+    monotone per shard, not across the interleaved merged stream.
     """
 
     step: int
     value: float
     best_value: float
+    shard: Optional[int] = None
 
 
 ProgressFn = Callable[[Trial], None]
@@ -55,8 +62,10 @@ class SearchRequest:
         options dict can be shared across a method sweep.
     on_progress / progress_every: optional streaming hook; optimizers emit a
         :class:`Trial` roughly every ``progress_every`` samples.  Chunked
-        backends (reinforce, two_stage) stream live; single-shot backends
-        emit the trace when their underlying run returns.
+        engines (reinforce, two_stage, a2c, ppo2) stream live; single-shot
+        engines emit the trace when their underlying run returns.  ``fanout``
+        merges all of its shards into this one hook, tagging each Trial with
+        its shard index.
     """
 
     workload: Any

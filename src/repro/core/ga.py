@@ -35,6 +35,9 @@ class GAConfig:
     mutation_rate: float = 0.05
     crossover_rate: float = 0.05
     seed: int = 0
+    # None = auto: the Pallas batched cost kernel on TPU, the jnp oracle
+    # elsewhere (interpret mode would dominate the generation on CPU).
+    use_kernel: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +59,17 @@ class GAResult(NamedTuple):
     evals: int
 
 
-def _fitness(env, ecfg, pe, kt, df):
+def _fitness(env, ecfg, pe, kt, df, use_kernel: bool = False):
+    if use_kernel and getattr(pe, "ndim", 0) == 2:
+        # Population-sized batches are exactly the Pallas kernel's shape:
+        # (B, N) design points against the (N, NUM_FIELDS) workload.
+        from repro.kernels import ops
+        lat, en, area, pw = ops.batched_cost(env.layers, pe, kt, df)
+        perf = jnp.sum(lat if ecfg.objective == "latency" else en, axis=-1)
+        cons_l = area if ecfg.constraint == "area" else pw
+        cons = (jnp.sum(cons_l, axis=-1) if ecfg.scenario == "LP"
+                else jnp.max(cons_l, axis=-1))
+        return jnp.where(cons <= env.budget, perf, jnp.inf)
     perf, cons, feas = env_lib.genome_cost(env, ecfg, pe, kt, df)
     return jnp.where(feas, perf, jnp.inf)
 
@@ -64,14 +77,22 @@ def _fitness(env, ecfg, pe, kt, df):
 # ---------------------------------------------------------------------------
 # Baseline GA (coarse level space).
 # ---------------------------------------------------------------------------
-def baseline_ga(workload, ecfg: env_lib.EnvConfig,
-                cfg: GAConfig = GAConfig()) -> GAResult:
-    env = env_lib.make_env(workload, ecfg)
+def make_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+                   cfg: GAConfig):
+    """(init_carry, gen_step, decode) building blocks of the baseline GA.
+
+    ``init_carry(seed)`` builds the scan carry for one independent GA run;
+    ``gen_step`` is seed-free, so the fanout device backend can shard_map one
+    compiled generation scan across devices whose carries differ only in
+    their seed.  ``baseline_ga`` below is the single-run composition.
+    """
     N = env.num_layers
     P = cfg.population
     L = ecfg.levels
     n_df = 3 if ecfg.mix else 1
-    key = jax.random.PRNGKey(cfg.seed)
+    genes = 3 if ecfg.mix else 2
+    use_kernel = (cfg.use_kernel if cfg.use_kernel is not None
+                  else jax.default_backend() == "tpu")
 
     def decode(genome):
         pe = env.pe_table[genome[..., 0]]
@@ -83,7 +104,7 @@ def baseline_ga(workload, ecfg: env_lib.EnvConfig,
     def gen_step(carry, _):
         pop, best_val, best_genome, key = carry
         pe, kt, df = decode(pop)
-        fit = _fitness(env, ecfg, pe, kt, df)          # (P,)
+        fit = _fitness(env, ecfg, pe, kt, df, use_kernel)   # (P,)
         order = jnp.argsort(fit)
         pop = pop[order]
         fit = fit[order]
@@ -110,15 +131,26 @@ def baseline_ga(workload, ecfg: env_lib.EnvConfig,
         pop = jnp.concatenate([pop[:half], children], axis=0)
         return (pop, best_val, best_genome, key), best_val
 
-    genes = 3 if ecfg.mix else 2
-    key, k0 = jax.random.split(key)
-    pop = jax.random.randint(k0, (P, N, genes), 0, L)
-    if ecfg.mix:
-        pop = pop.at[..., 2].set(
-            jax.random.randint(jax.random.fold_in(k0, 7), (P, N), 0, 3))
-    init = (pop, jnp.inf, jnp.zeros((N, genes), jnp.int32), key)
+    def init_carry(seed):
+        key = jax.random.PRNGKey(seed)
+        key, k0 = jax.random.split(key)
+        pop = jax.random.randint(k0, (P, N, genes), 0, L)
+        if ecfg.mix:
+            pop = pop.at[..., 2].set(
+                jax.random.randint(jax.random.fold_in(k0, 7), (P, N), 0, 3))
+        return (pop, jnp.float32(jnp.inf),
+                jnp.zeros((N, genes), jnp.int32), key)
+
+    return init_carry, gen_step, decode
+
+
+def baseline_ga(workload, ecfg: env_lib.EnvConfig,
+                cfg: GAConfig = GAConfig()) -> GAResult:
+    env = env_lib.make_env(workload, ecfg)
+    N = env.num_layers
+    init_carry, gen_step, decode = make_ga_engine(env, ecfg, cfg)
     (pop, best_val, best_genome, _), hist = jax.lax.scan(
-        gen_step, init, None, length=cfg.generations)
+        gen_step, init_carry(cfg.seed), None, length=cfg.generations)
     pe, kt, df = decode(best_genome)
     df = jnp.broadcast_to(df, (N,))
     return GAResult(best_val, pe, kt, df, hist,

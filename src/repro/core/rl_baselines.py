@@ -167,21 +167,15 @@ def _gae(rewards, values, mask, gamma, lam):
     return advs[::-1]
 
 
-def run_ac_search(workload, ecfg: env_lib.EnvConfig,
-                  acfg: ACConfig = ACConfig(),
-                  pcfg: policy_lib.PolicyConfig | None = None,
-                  chunk: int = 500):
-    """A2C / PPO2 search with the same interface as reinforce.run_search."""
-    env = env_lib.make_env(workload, ecfg)
-    if pcfg is None:
-        pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, mix=ecfg.mix,
-                                       levels=ecfg.levels)
-    opt = optim.Adam(lr=acfg.lr, clip_norm=1.0)
+def init_ac_search(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+                  pcfg: policy_lib.PolicyConfig, acfg: ACConfig,
+                  opt: optim.Adam) -> reinforce.SearchState:
+    """Fresh A2C/PPO2 search state (policy + critic params, empty best)."""
     key = jax.random.PRNGKey(acfg.seed)
     key, pkey = jax.random.split(key)
     params = init_ac_params(pkey, pcfg)
     N = env.num_layers
-    state = reinforce.SearchState(
+    return reinforce.SearchState(
         params=params, opt_state=opt.init(params),
         pmin=jnp.asarray(jnp.inf, jnp.float32),
         best_value=jnp.asarray(jnp.inf, jnp.float32),
@@ -189,6 +183,29 @@ def run_ac_search(workload, ecfg: env_lib.EnvConfig,
         best_kt_lvl=jnp.zeros((N,), jnp.int32),
         best_df=jnp.full((N,), ecfg.dataflow, jnp.int32),
         key=key, epoch=jnp.zeros((), jnp.int32))
+
+
+def run_ac_search(workload, ecfg: env_lib.EnvConfig,
+                  acfg: ACConfig = ACConfig(),
+                  pcfg: policy_lib.PolicyConfig | None = None,
+                  state: reinforce.SearchState | None = None,
+                  chunk: int = 500,
+                  on_chunk=None):
+    """A2C / PPO2 search with the same interface as reinforce.run_search.
+
+    Resumable: pass the returned ``state`` back in to continue a run (the
+    chunk boundaries never change the result -- the epoch scan carries the
+    same state either way).  ``on_chunk(state, chunk_history, epochs_done)``
+    fires after every chunk, which is how the unified API streams a2c/ppo2
+    progress live, exactly like reinforce/two_stage.
+    """
+    env = env_lib.make_env(workload, ecfg)
+    if pcfg is None:
+        pcfg = policy_lib.PolicyConfig(obs_dim=ecfg.obs_dim, mix=ecfg.mix,
+                                       levels=ecfg.levels)
+    opt = optim.Adam(lr=acfg.lr, clip_norm=1.0)
+    if state is None:
+        state = init_ac_search(env, ecfg, pcfg, acfg, opt)
     rollout = make_ac_rollout(ecfg, pcfg, env)
     E = acfg.episodes_per_epoch
 
@@ -268,8 +285,11 @@ def run_ac_search(workload, ecfg: env_lib.EnvConfig,
     while done < acfg.epochs:
         n = min(chunk, acfg.epochs - done)
         state, metrics = run_chunk(state, n)
-        history.append(jax.tree.map(jax.device_get, metrics))
+        h = jax.tree.map(jax.device_get, metrics)
+        history.append(h)
         done += n
+        if on_chunk is not None:
+            on_chunk(state, h, done)
     import numpy as np
 
     hist = {k: np.concatenate([h[k] for h in history]) for k in history[0]}

@@ -61,6 +61,13 @@ def build_request(args) -> api.SearchRequest:
     }
     if args.lr is not None:      # unset keeps each method's own default
         options["lr"] = args.lr
+    if args.method == "fanout":
+        # The per-method knobs collected above configure the *inner* method;
+        # the fanout layer itself takes the shard/backend flags.
+        options = {"inner": args.fanout_inner,
+                   "n_shards": args.fanout_shards,
+                   "backend": args.fanout_backend,
+                   "inner_options": options}
     # eps counts whole-model evaluations; --epochs keeps the paper's
     # epoch semantics (one epoch = --episodes samples for the RL family).
     return api.SearchRequest(
@@ -106,6 +113,17 @@ def main(argv=None):
     ap.add_argument("--ga-population", type=int, default=None,
                     help="default: 20 for the two_stage fine-tuner, "
                     "100 for --method ga")
+    ap.add_argument("--fanout-backend", default="auto",
+                    choices=["auto", "device", "threads", "serial"],
+                    help="--method fanout execution backend: one shard per "
+                    "local device in one XLA program (device), one host "
+                    "thread per shard (threads), or an in-process loop "
+                    "(serial); auto picks device for JAX-native inners "
+                    "when enough devices exist, else threads")
+    ap.add_argument("--fanout-inner", default="reinforce",
+                    help="--method fanout: inner method each shard runs")
+    ap.add_argument("--fanout-shards", type=int, default=4,
+                    help="--method fanout: number of parallel searches")
     ap.add_argument("--progress-every", type=int, default=0,
                     help="stream best-so-far every N samples (0 = off)")
     ap.add_argument("--out", default="")
@@ -127,7 +145,9 @@ def main(argv=None):
     if args.progress_every > 0:
         request.progress_every = args.progress_every
         request.on_progress = lambda t: print(
-            f"  [{t.step}/{request.eps}] best={t.best_value:.4e}",
+            f"  [{t.step}/{request.eps}]"
+            + (f" shard={t.shard}" if t.shard is not None else "")
+            + f" best={t.best_value:.4e}",
             flush=True)
 
     out = api.run_search(request)

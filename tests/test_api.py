@@ -153,6 +153,39 @@ def test_reinforce_streaming_matches_single_shot():
     np.testing.assert_allclose(streamed.history, plain.history)
 
 
+@pytest.mark.parametrize("method", ["a2c", "ppo2"])
+def test_actor_critic_streams_live_and_matches_single_shot(method):
+    """a2c/ppo2 stream through on_chunk like reinforce (no carve-out)."""
+    plain = api.run_search(_req(method, eps=30, seed=4))
+    trials = []
+    streamed = api.run_search(_req(method, eps=30, seed=4,
+                                   on_progress=trials.append,
+                                   progress_every=10))
+    assert streamed.best_value == pytest.approx(plain.best_value)
+    assert len(trials) == 3
+    steps = [t.step for t in trials]
+    assert steps == sorted(steps) and steps[-1] == 30
+    np.testing.assert_allclose(streamed.history, plain.history)
+
+
+def test_ac_search_resumes_from_prior_state():
+    """run_ac_search continues bit-identically from a returned state."""
+    from repro.core import rl_baselines
+
+    full_cfg = rl_baselines.ACConfig(algo="a2c", epochs=20,
+                                     episodes_per_epoch=1, seed=9)
+    half_cfg = rl_baselines.ACConfig(algo="a2c", epochs=10,
+                                     episodes_per_epoch=1, seed=9)
+    state_full, hist_full = rl_baselines.run_ac_search(_wl(), ECFG, full_cfg)
+    state_half, hist_a = rl_baselines.run_ac_search(_wl(), ECFG, half_cfg)
+    state_res, hist_b = rl_baselines.run_ac_search(_wl(), ECFG, half_cfg,
+                                                   state=state_half)
+    assert float(state_res.best_value) == float(state_full.best_value)
+    np.testing.assert_array_equal(
+        np.concatenate([hist_a["best_value"], hist_b["best_value"]]),
+        hist_full["best_value"])
+
+
 # ---------------------------------------------------------------------------
 # Distributed wrappers.
 # ---------------------------------------------------------------------------
@@ -164,3 +197,78 @@ def test_fanout_merges_shards():
     assert len(shard_bests) == 3
     assert out.best_value == min(shard_bests)
     assert len(out.history) == 100
+
+
+@pytest.mark.parametrize("inner,eps,iopts", [
+    ("random", 200, {}), ("sa", 150, {}), ("reinforce", 30, {}),
+])
+def test_fanout_threads_parity_with_serial(inner, eps, iopts):
+    """threads and serial backends return identical merged outcomes."""
+    outs = {}
+    for backend in ("serial", "threads"):
+        outs[backend] = api.run_search(_req(
+            "fanout", eps=eps, seed=2,
+            options={"inner": inner, "n_shards": 3, "backend": backend,
+                     "inner_options": iopts}))
+    a, b = outs["serial"], outs["threads"]
+    assert a.best_value == b.best_value
+    assert a.history.tobytes() == b.history.tobytes()
+    np.testing.assert_array_equal(a.pe, b.pe)
+    np.testing.assert_array_equal(a.kt, b.kt)
+    assert a.extras["shard_best_values"] == b.extras["shard_best_values"]
+    assert a.extras["best_seed"] == b.extras["best_seed"]
+
+
+@pytest.mark.parametrize("backend", ["serial", "threads"])
+def test_fanout_progress_is_shard_tagged_and_monotone(backend):
+    """Merged chunks carry their shard id; steps are monotone per shard."""
+    trials = []
+    out = api.run_search(_req(
+        "fanout", eps=200, progress_every=50, on_progress=trials.append,
+        options={"inner": "random", "n_shards": 3, "backend": backend}))
+    assert sorted({t.shard for t in trials}) == [0, 1, 2]
+    for s in range(3):
+        steps = [t.step for t in trials if t.shard == s]
+        assert steps == sorted(steps) and steps[-1] == 200
+    # Ensemble best-so-far is monotone in emission order and ends at the
+    # merged best.
+    bests = [t.best_value for t in trials]
+    assert all(b2 <= b1 for b1, b2 in zip(bests, bests[1:]))
+    assert bests[-1] == pytest.approx(out.best_value)
+
+
+def test_fanout_streaming_rl_inner_matches_unstreamed():
+    """Live-streamed fanout (chunked inner) equals the silent run."""
+    plain = api.run_search(_req(
+        "fanout", eps=30, options={"inner": "reinforce", "n_shards": 2,
+                                   "backend": "serial"}))
+    trials = []
+    streamed = api.run_search(_req(
+        "fanout", eps=30, progress_every=10, on_progress=trials.append,
+        options={"inner": "reinforce", "n_shards": 2, "backend": "serial"}))
+    assert streamed.best_value == plain.best_value
+    assert streamed.history.tobytes() == plain.history.tobytes()
+    assert len(trials) == 6  # 2 shards x 3 chunks
+
+
+def test_fanout_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown fanout backend"):
+        api.run_search(_req("fanout", eps=50,
+                            options={"inner": "random",
+                                     "backend": "mpi"}))
+
+
+def test_fanout_device_backend_requires_jax_native_inner():
+    with pytest.raises(ValueError, match="JAX-native"):
+        api.run_search(_req("fanout", eps=50,
+                            options={"inner": "sa", "backend": "device"}))
+
+
+def test_fanout_device_backend_requires_enough_devices():
+    import jax
+
+    n = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="local devices"):
+        api.run_search(_req("fanout", eps=50,
+                            options={"inner": "reinforce", "n_shards": n,
+                                     "backend": "device"}))

@@ -102,6 +102,106 @@ print("OK")
     assert "OK" in out
 
 
+def test_masked_int8_pod_reduction_matches_plain_masked_psum():
+    """Hierarchical masked+compressed reduction == flat masked_psum within
+    int8 quantization tolerance, on 1-pod, 4-pod and asymmetric-alive
+    meshes (regression: the old path divided by the axis count and a
+    hardcoded npods=2)."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.distributed.dist_search import masked_psum, masked_hierarchical_psum
+
+def run_case(mesh_shape, axes, alive_np):
+    n = int(np.prod(mesh_shape))
+    mesh = jax.make_mesh(mesh_shape, axes)
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 64))
+    def f(xs, al):
+        local, a = xs[0], al[0]
+        plain = masked_psum({"g": local}, a, axes)["g"]
+        comp = masked_hierarchical_psum({"g": local}, a, axes,
+                                        compress=True)["g"]
+        return plain[None], comp[None]
+    plain, comp = shard_map(f, mesh=mesh, in_specs=(P(axes, None), P(axes)),
+                            out_specs=(P(axes, None), P(axes, None)),
+                            check_rep=False)(x, jnp.asarray(alive_np))
+    plain, comp = np.asarray(plain[0]), np.asarray(comp[0])
+    rel = np.abs(plain - comp).max() / max(np.abs(plain).max(), 1e-9)
+    assert rel < 0.05, (mesh_shape, axes, rel)
+    return rel
+
+# 1-pod mesh (pod axis of size 1: the cross-pod hop is a no-op).
+run_case((1, 4), ("pod", "data"), np.ones(4, bool))
+# 4-pod mesh, all alive (old code scaled by npods=2 -> 2x error).
+run_case((4, 2), ("pod", "data"), np.ones(8, bool))
+# Asymmetric alive: pod 0 keeps 1 of 2 devices, others keep 2 -- per-pod
+# means averaged across pods would NOT equal the global masked mean.
+mask = np.ones(8, bool); mask[[1, 2, 3]] = False
+run_case((4, 2), ("pod", "data"), mask)
+# Pod-only mesh: empty in-pod axis set.
+mask = np.ones(8, bool); mask[5] = False
+run_case((8,), ("pod",), mask)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_fanout_device_backend_bit_identical_to_serial():
+    """fanout backend='device' == backend='serial' for reinforce and ga."""
+    out = run_with_devices("""
+import numpy as np
+from repro import api
+from repro.core import env as env_lib
+from repro.costmodel.layers import LayerSpec
+
+wl = [LayerSpec.conv(32,16,28,28,3,3), LayerSpec.gemm(64,256,128)]
+ecfg = env_lib.EnvConfig(platform="cloud")
+for inner, eps, iopts in [("reinforce", 40, {}),
+                          ("ga", 200, {"population": 20})]:
+    outs = {}
+    for backend in ("serial", "device"):
+        outs[backend] = api.run_search(api.SearchRequest(
+            workload=wl, env=ecfg, eps=eps, seed=3, method="fanout",
+            options={"inner": inner, "n_shards": 4, "backend": backend,
+                     "inner_options": iopts}))
+    a, b = outs["serial"], outs["device"]
+    assert a.best_value == b.best_value, (inner, a.best_value, b.best_value)
+    assert a.history.tobytes() == b.history.tobytes(), inner
+    np.testing.assert_array_equal(a.pe, b.pe)
+    np.testing.assert_array_equal(a.kt, b.kt)
+    np.testing.assert_array_equal(a.df, b.df)
+    assert a.extras["shard_best_values"] == b.extras["shard_best_values"]
+    assert a.extras["best_seed"] == b.extras["best_seed"]
+print("OK")
+""", n=4)
+    assert "OK" in out
+
+
+def test_fanout_device_backend_streams_tagged_progress():
+    """Device backend streams shard-tagged, per-shard-monotone chunks."""
+    out = run_with_devices("""
+from repro import api
+from repro.core import env as env_lib
+from repro.costmodel.layers import LayerSpec
+
+wl = [LayerSpec.conv(32,16,28,28,3,3), LayerSpec.gemm(64,256,128)]
+trials = []
+out = api.run_search(api.SearchRequest(
+    workload=wl, env=env_lib.EnvConfig(platform="cloud"), eps=40, seed=3,
+    method="fanout", progress_every=10, on_progress=trials.append,
+    options={"inner": "reinforce", "n_shards": 4, "backend": "device"}))
+assert sorted({t.shard for t in trials}) == [0, 1, 2, 3]
+for s in range(4):
+    steps = [t.step for t in trials if t.shard == s]
+    assert steps == sorted(steps) and steps[-1] == 40, steps
+bests = [t.best_value for t in trials]
+assert all(b2 <= b1 for b1, b2 in zip(bests, bests[1:]))
+print("OK")
+""", n=4)
+    assert "OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """pjit train step on a (2,2) mesh == unsharded result."""
     out = run_with_devices("""

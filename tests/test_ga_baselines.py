@@ -33,6 +33,23 @@ def test_baseline_ga_improves():
     assert len(finite) and finite[-1] <= finite[0]
 
 
+def test_ga_fitness_kernel_path_matches_oracle():
+    """GAConfig.use_kernel routes fitness through the Pallas batched cost
+    kernel (interpret mode off-TPU) with the same feasibility/objective."""
+    env = env_lib.make_env(_wl(), ECFG)
+    key = jax.random.PRNGKey(0)
+    pe = jax.random.choice(key, env.pe_table, (8, env.num_layers))
+    kt = jax.random.choice(jax.random.fold_in(key, 1), env.kt_table,
+                           (8, env.num_layers))
+    df = jnp.asarray(ECFG.dataflow, jnp.int32)
+    oracle = ga_lib._fitness(env, ECFG, pe, kt, df, use_kernel=False)
+    kernel = ga_lib._fitness(env, ECFG, pe, kt, df, use_kernel=True)
+    np.testing.assert_array_equal(np.isfinite(oracle), np.isfinite(kernel))
+    finite = np.isfinite(np.asarray(oracle))
+    np.testing.assert_allclose(np.asarray(kernel)[finite],
+                               np.asarray(oracle)[finite], rtol=1e-5)
+
+
 def test_local_ga_improves_on_seed_and_stays_feasible():
     env = env_lib.make_env(_wl(), ECFG)
     N = env.num_layers
