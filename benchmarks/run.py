@@ -29,6 +29,7 @@ BENCHES = [
     ("costmodel_throughput", "benchmarks.bench_costmodel_throughput"),
     ("dist_search", "benchmarks.bench_dist_search"),
     ("fanout_backends", "benchmarks.bench_fanout_backends"),
+    ("search_service", "benchmarks.bench_search_service"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

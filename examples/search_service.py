@@ -1,0 +1,66 @@
+"""Search-as-a-service: many users, one accelerator, one memo cache.
+
+    PYTHONPATH=src python examples/search_service.py [--users 6]
+
+Submits a mix of "user" searches -- different methods, two popular
+workloads, a couple of identical resubmissions -- to one
+:class:`repro.serving.SearchService` and streams their progress as it
+interleaves.  At the end it prints each user's outcome plus the service
+stats: how many cost evaluations the cross-request batcher fused away and
+the memo-cache hit rate.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro import api                                      # noqa: E402
+from repro.serving import SearchService, ServiceConfig     # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=6)
+    ap.add_argument("--eps", type=int, default=400)
+    args = ap.parse_args()
+
+    workloads = ("ncf", "mobilenet_v2")
+    methods = ("random", "grid", "bo", "reinforce")
+
+    def on_progress(uid):
+        return lambda t: print(
+            f"  user{uid}: step={t.step} best={t.best_value:.4e}",
+            flush=True)
+
+    t0 = time.time()
+    with SearchService(ServiceConfig(max_workers=args.users)) as svc:
+        tickets = []
+        for u in range(args.users):
+            tickets.append(svc.submit(api.SearchRequest(
+                workload=workloads[u % 2],
+                env=api.EnvConfig(platform="cloud"),
+                eps=args.eps,
+                seed=u // 2,                 # pairs of users share a query
+                method=methods[u % 4],
+                on_progress=on_progress(u),
+                progress_every=args.eps // 3)))
+        outs = [t.result() for t in tickets]
+        stats = svc.stats()
+
+    print(f"\n{args.users} searches in {time.time() - t0:.1f}s")
+    for u, (t, out) in enumerate(zip(tickets, outs)):
+        print(f"  user{u}: {out.method:10s} {str(t.request.workload):14s} "
+              f"best={out.best_value:.4e} wall={t.wall_seconds:.1f}s")
+    print(f"\nbatcher: {stats['dispatches']} dispatches, "
+          f"{stats['fused_dispatches']} fused, "
+          f"peak {stats['max_items_per_dispatch']} reqs/dispatch")
+    print(f"cache:   {stats['cache_hits']} hits / "
+          f"{stats['cache_misses']} misses "
+          f"(hit rate {stats['cache_hit_rate']:.0%}), "
+          f"{stats['fresh_points']} fresh evals "
+          f"for {stats['points']} requested points")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,7 +49,8 @@ class RandomOptimizer:
         opts = request.options
         res = baselines.random_search(
             request.resolve_workload(), request.env, eps=request.eps,
-            seed=request.seed, batch=opts.get("batch", 512))
+            seed=request.seed, batch=opts.get("batch", 512),
+            eval_fn=opts.get("eval_fn"))
         return _outcome(request, self.name, res.best_value, res.best_pe,
                         res.best_kt, None, res.history, t0)
 
@@ -63,7 +64,8 @@ class GridOptimizer:
         opts = request.options
         res = baselines.grid_search(
             request.resolve_workload(), request.env, eps=request.eps,
-            stride=opts.get("stride", 1), batch=opts.get("batch", 512))
+            stride=opts.get("stride", 1), batch=opts.get("batch", 512),
+            eval_fn=opts.get("eval_fn"))
         return _outcome(request, self.name, res.best_value, res.best_pe,
                         res.best_kt, None, res.history, t0)
 
@@ -99,7 +101,8 @@ class BayesOptOptimizer:
             n_candidates=opts.get("n_candidates", 64),
             gamma=opts.get("gamma", 0.15),
             init_random=opts.get("init_random", 64),
-            batch=opts.get("batch", 16))
+            batch=opts.get("batch", 16),
+            eval_fn=opts.get("eval_fn"))
         return _outcome(request, self.name, res.best_value, res.best_pe,
                         res.best_kt, None, res.history, t0)
 

@@ -34,15 +34,29 @@ def _decode_and_eval(env, ecfg, genome):
     return jnp.where(feas, perf, jnp.inf), pe, kt
 
 
+def _eval_batch_fn(env, ecfg, eval_fn):
+    """The genome-batch evaluator the host-loop baselines iterate on.
+
+    ``eval_fn(genomes (b, N, 2) int levels) -> (fit (b,), pe (b, N),
+    kt (b, N))`` overrides the built-in jitted evaluator -- the search
+    service injects its cross-request batcher here; results must be
+    bit-identical to the default path (see repro.serving.batcher).
+    """
+    if eval_fn is not None:
+        return eval_fn
+    return jax.jit(lambda g: _decode_and_eval(env, ecfg, g))
+
+
 # ---------------------------------------------------------------------------
 def random_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
-                  seed: int = 0, batch: int = 512) -> BaselineResult:
+                  seed: int = 0, batch: int = 512,
+                  eval_fn=None) -> BaselineResult:
     env = env_lib.make_env(workload, ecfg)
     N = env.num_layers
     key = jax.random.PRNGKey(seed)
     best, best_pe, best_kt = np.inf, None, None
     hist = []
-    eval_b = jax.jit(lambda g: _decode_and_eval(env, ecfg, g))
+    eval_b = _eval_batch_fn(env, ecfg, eval_fn)
     done = 0
     while done < eps:
         n = min(batch, eps - done)
@@ -63,7 +77,8 @@ def random_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
 
 # ---------------------------------------------------------------------------
 def grid_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
-                stride: int = 1, batch: int = 512) -> BaselineResult:
+                stride: int = 1, batch: int = 512,
+                eval_fn=None) -> BaselineResult:
     """Lexicographic sweep with stride over the per-layer level space.
 
     For an N-layer model the space is L^(2N); Eps samples only scratch the
@@ -73,7 +88,7 @@ def grid_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
     env = env_lib.make_env(workload, ecfg)
     N = env.num_layers
     base = int(np.ceil(ecfg.levels / stride))
-    eval_b = jax.jit(lambda g: _decode_and_eval(env, ecfg, g))
+    eval_b = _eval_batch_fn(env, ecfg, eval_fn)
     best, best_pe, best_kt = np.inf, None, None
     hist = []
     done = 0
@@ -158,7 +173,8 @@ def simulated_annealing(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
 # ---------------------------------------------------------------------------
 def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
               seed: int = 0, n_candidates: int = 64, gamma: float = 0.15,
-              init_random: int = 64, batch: int = 16) -> BaselineResult:
+              init_random: int = 64, batch: int = 16,
+              eval_fn=None) -> BaselineResult:
     """Tree-Parzen-Estimator Bayesian optimization (surrogate + acquisition).
 
     The paper uses a GP-based BO [54]; a GP over a 2N-dim discrete space with
@@ -172,7 +188,7 @@ def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
     env = env_lib.make_env(workload, ecfg)
     N = env.num_layers
     L = ecfg.levels
-    eval_b = jax.jit(lambda g: _decode_and_eval(env, ecfg, g))
+    eval_b = _eval_batch_fn(env, ecfg, eval_fn)
 
     X = rng.integers(0, L, size=(init_random, N, 2)).astype(np.int32)
     fit, pe_all, kt_all = eval_b(jnp.asarray(X))

@@ -121,6 +121,26 @@ def layer_cost(env: EnvArrays, cfg: EnvConfig, t, pe, kt, df):
     return perf, cons
 
 
+def aggregate_costs(lat, en, area, pw, cfg: EnvConfig, budget):
+    """Per-layer costs (..., N) -> whole-model (objective, constraint,
+    feasible).
+
+    THE one definition of the aggregation semantics -- objective summed
+    over layers, constraint summed (LP: one partition per layer) or maxed
+    (LS: one shared design) -- shared by :func:`genome_cost`, the GA's
+    Pallas-kernel fitness path and the serving batcher, so the three can
+    never drift apart.
+    """
+    perf_l = lat if cfg.objective == "latency" else en
+    cons_l = area if cfg.constraint == "area" else pw
+    total_perf = jnp.sum(perf_l, axis=-1)
+    if cfg.scenario == "LP":
+        total_cons = jnp.sum(cons_l, axis=-1)
+    else:
+        total_cons = jnp.max(cons_l, axis=-1)
+    return total_perf, total_cons, total_cons <= budget
+
+
 def genome_cost(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
     """Whole-model (objective, constraint, feasible) for per-layer arrays.
 
@@ -128,14 +148,8 @@ def genome_cost(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
     LP: constraint = sum over layers; LS: constraint = max over layers.
     """
     out = maestro.evaluate(env.layers, pe, kt, df)
-    perf = out.latency if cfg.objective == "latency" else out.energy
-    cons = out.area if cfg.constraint == "area" else out.power
-    total_perf = jnp.sum(perf, axis=-1)
-    if cfg.scenario == "LP":
-        total_cons = jnp.sum(cons, axis=-1)
-    else:
-        total_cons = jnp.max(cons, axis=-1)
-    return total_perf, total_cons, total_cons <= env.budget
+    return aggregate_costs(out.latency, out.energy, out.area, out.power,
+                           cfg, env.budget)
 
 
 def action_tables(cfg: EnvConfig) -> Sequence[np.ndarray]:

@@ -65,11 +65,9 @@ def _fitness(env, ecfg, pe, kt, df, use_kernel: bool = False):
         # (B, N) design points against the (N, NUM_FIELDS) workload.
         from repro.kernels import ops
         lat, en, area, pw = ops.batched_cost(env.layers, pe, kt, df)
-        perf = jnp.sum(lat if ecfg.objective == "latency" else en, axis=-1)
-        cons_l = area if ecfg.constraint == "area" else pw
-        cons = (jnp.sum(cons_l, axis=-1) if ecfg.scenario == "LP"
-                else jnp.max(cons_l, axis=-1))
-        return jnp.where(cons <= env.budget, perf, jnp.inf)
+        perf, _, feas = env_lib.aggregate_costs(lat, en, area, pw, ecfg,
+                                                env.budget)
+        return jnp.where(feas, perf, jnp.inf)
     perf, cons, feas = env_lib.genome_cost(env, ecfg, pe, kt, df)
     return jnp.where(feas, perf, jnp.inf)
 

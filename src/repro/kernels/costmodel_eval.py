@@ -74,3 +74,49 @@ def cost_eval_padded(layers_t, pe, kt, df, *, interpret: bool = True):
         out_shape=out_shape,
         interpret=interpret,
     )(layers_t, pe, kt, df)
+
+
+def _cost_kernel_multi(layers_ref, pe_ref, kt_ref, df_ref,
+                       lat_ref, en_ref, area_ref, pw_ref):
+    """One (TB, TN) tile with a PER-ROW layer descriptor.
+
+    Unlike :func:`_cost_kernel`, every batch row carries its own layer
+    fields -- the multi-tenant shape the search service's cross-request
+    batcher produces, where one dispatch fuses design points drawn from
+    DIFFERENT workloads (mobilenet rows next to resnet rows).
+    """
+    fields = [layers_ref[:, i, :] for i in range(NUM_FIELDS)]
+    K, C, Y, X, R, S, ltype, repeat = fields
+    out = maestro.core_cost(K, C, Y, X, R, S, ltype, repeat,
+                            pe_ref[...], kt_ref[...], df_ref[...])
+    lat_ref[...] = out.latency
+    en_ref[...] = out.energy
+    area_ref[...] = out.area
+    pw_ref[...] = out.power
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cost_eval_multi_padded(layers_bt, pe, kt, df, *, interpret: bool = True):
+    """Per-row-layers kernel on pre-padded inputs.
+
+    layers_bt: (B, NUM_FIELDS, N) f32 -- row b's own layer descriptors.
+    pe/kt/df:  (B, N) f32, B % TB == 0, N % TN == 0.
+    Returns (latency, energy, area, power), each (B, N) f32.
+
+    VMEM per step grows by the (TB, NUM_FIELDS, TN) layer block versus the
+    broadcast kernel: (8*TB + 7*TB) * TN * 4 B ~= 60 KiB, still far under
+    the 16 MiB budget.
+    """
+    B, N = pe.shape
+    grid = (B // TB, N // TN)
+    layer_spec = pl.BlockSpec((TB, NUM_FIELDS, TN), lambda i, j: (i, 0, j))
+    bn_spec = pl.BlockSpec((TB, TN), lambda i, j: (i, j))
+    out_shape = [jax.ShapeDtypeStruct((B, N), jnp.float32)] * 4
+    return pl.pallas_call(
+        _cost_kernel_multi,
+        grid=grid,
+        in_specs=[layer_spec, bn_spec, bn_spec, bn_spec],
+        out_specs=[bn_spec] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(layers_bt, pe, kt, df)

@@ -59,6 +59,42 @@ def batched_cost(layers, pe, kt, df, *, use_kernel: bool = True):
     return tuple(o[:B, :N] for o in outs)
 
 
+def batched_cost_multi(layers, pe, kt, df, *, use_kernel: bool = True):
+    """Evaluate a (B, N) batch where EVERY ROW has its own layer descriptors.
+
+    layers: (B, N, NUM_FIELDS); pe/kt/df: (B, N) (kt/df may broadcast).
+    Returns (latency, energy, area, power), each (B, N) f32.
+
+    This is the multi-tenant shape of the serving batcher: one dispatch can
+    fuse design points belonging to different users' workloads.  Tile
+    padding uses benign all-ones values whose outputs are sliced away
+    before returning -- callers aggregating over the full (B, N) result
+    must mask their OWN padding (the batcher pads its rows with
+    ``repeat=0`` layers, which zero all four outputs).
+    """
+    layers = jnp.asarray(layers, jnp.float32)
+    B, N = layers.shape[0], layers.shape[1]
+    pe = jnp.broadcast_to(jnp.asarray(pe, jnp.float32), (B, N))
+    kt = jnp.broadcast_to(jnp.asarray(kt, jnp.float32), (B, N))
+    df = jnp.broadcast_to(jnp.asarray(df, jnp.float32), (B, N))
+
+    layers_bt = layers.transpose(0, 2, 1)  # (B, NUM_FIELDS, N)
+    if not use_kernel:
+        return ref.cost_eval_multi_ref(layers_bt, pe, kt, df)
+
+    layers_p = _pad_to(_pad_to(layers_bt, 0, costmodel_eval.TB, 1.0), 2,
+                       costmodel_eval.TN, 1.0)
+    pe_p = _pad_to(_pad_to(pe, 0, costmodel_eval.TB, 1.0), 1,
+                   costmodel_eval.TN, 1.0)
+    kt_p = _pad_to(_pad_to(kt, 0, costmodel_eval.TB, 1.0), 1,
+                   costmodel_eval.TN, 1.0)
+    df_p = _pad_to(_pad_to(df, 0, costmodel_eval.TB, 1.0), 1,
+                   costmodel_eval.TN, 1.0)
+    outs = costmodel_eval.cost_eval_multi_padded(layers_p, pe_p, kt_p, df_p,
+                                                 interpret=_interpret())
+    return tuple(o[:B, :N] for o in outs)
+
+
 def lstm_step(x, h, c, wx, wh, b, *, use_kernel: bool = True):
     """One LSTM cell step.  x: (B, I); h/c: (B, H); returns (h', c')."""
     if not use_kernel:

@@ -22,6 +22,17 @@ def cost_eval_ref(layers_t, pe, kt, df):
     return out.latency, out.energy, out.area, out.power
 
 
+def cost_eval_multi_ref(layers_bt, pe, kt, df):
+    """Oracle for the per-row-layers kernel: (B, NUM_FIELDS, N) x (B, N).
+
+    Every batch row carries its own layer descriptor (the cross-request
+    batcher's multi-tenant shape); plain broadcasting, no tiling.
+    """
+    fields = [layers_bt[:, i, :] for i in range(NUM_FIELDS)]
+    out = maestro.core_cost(*fields, pe, kt, df)
+    return out.latency, out.energy, out.area, out.power
+
+
 def lstm_cell_ref(x, h, c, wx, wh, b):
     """Oracle for kernels.lstm_cell: one fused LSTM step.
 

@@ -1,0 +1,261 @@
+"""Cross-request cost-eval batcher: one dispatch stream for N searches.
+
+Concurrent searches running on worker threads each produce host-side batches
+of genome evaluations (random/grid/bo route their ``eval_fn`` here).  Instead
+of every search driving its own serial jit-dispatch loop, evaluations are
+funneled through one dispatcher thread that:
+
+  1. flattens every pending request's genomes into per-layer *points*
+     ``(layer fields, pe, kt, df)`` -- the cost model is per-point, so points
+     from different workloads concatenate freely (multi-tenant batching);
+  2. dedupes identical points across (and within) requests with one
+     ``np.unique`` pass;
+  3. consults the :class:`~repro.serving.cost_cache.CostMemoCache` and
+     evaluates only the genuinely new points in ONE fused call -- the Pallas
+     per-row-layers kernel (``ops.batched_cost_multi``) on TPU, the jitted
+     jnp oracle elsewhere;
+  4. re-assembles each request's per-layer value tensor and aggregates it
+     with the exact jnp reductions of :func:`repro.core.env.genome_cost`.
+
+Exactness: per-point cost values are bit-identical whatever batch they are
+computed in (the model is elementwise), and the final per-genome reduction
+runs over the same ``(b, N)`` shape the serial engine reduces over -- so a
+search through the batcher returns bit-identical fitness to the same search
+run serially, cache hits and cross-request fusion included.  This is the
+property ``tests/test_search_service.py`` locks in.  (It holds on the jnp
+oracle path, i.e. everywhere but TPU; the TPU Pallas kernel agrees with
+the oracle to float32 allclose, like every kernel/oracle pair here.)
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as env_lib
+from repro.costmodel import maestro
+from repro.costmodel.layers import NUM_FIELDS
+from repro.serving.cost_cache import CostMemoCache
+
+_PE_COL = NUM_FIELDS
+_KT_COL = NUM_FIELDS + 1
+_DF_COL = NUM_FIELDS + 2
+ROW_WIDTH = NUM_FIELDS + 3   # layer fields + pe + kt + df
+
+
+@functools.lru_cache(maxsize=None)
+def _agg_fn(ecfg: "env_lib.EnvConfig"):
+    """Jitted (b, N, 4) -> (b,) fitness: the SAME ``env.aggregate_costs``
+    reduction ``genome_cost``/``_decode_and_eval`` run, over the same
+    (b, N) shape, which is what keeps batched results bit-identical to
+    serial ones."""
+
+    @jax.jit
+    def f(vals, budget):
+        perf, _, feas = env_lib.aggregate_costs(
+            vals[..., 0], vals[..., 1], vals[..., 2], vals[..., 3],
+            ecfg, budget)
+        return jnp.where(feas, perf, jnp.inf)
+
+    return f
+
+
+@jax.jit
+def _flat_cost(layers, pe, kt, df):
+    """(M, NUM_FIELDS) x (M,) -> (M, 4) point costs via the jnp oracle."""
+    out = maestro.evaluate(layers, pe, kt, df)
+    return jnp.stack([out.latency, out.energy, out.area, out.power], axis=-1)
+
+
+def _next_pow2(n: int, lo: int = 256) -> int:
+    m = lo
+    while m < n:
+        m *= 2
+    return m
+
+
+class _Item:
+    """One in-flight eval request: points + how to aggregate them."""
+
+    __slots__ = ("points", "shape", "agg_key", "budget", "event", "fit",
+                 "error")
+
+    def __init__(self, points, shape, agg_key, budget):
+        self.points = points          # (b*N, ROW_WIDTH) f32
+        self.shape = shape            # (b, N)
+        self.agg_key = agg_key        # the request's EnvConfig (hashable)
+        self.budget = budget          # f32 scalar
+        self.event = threading.Event()
+        self.fit: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+
+
+class CostEvalBatcher:
+    """Fuses concurrent searches' cost evaluations into single dispatches.
+
+    ``window_ms`` is the accumulation window after the first pending item;
+    while a dispatch executes, new arrivals queue up naturally, so steady-
+    state fusion widths track the number of concurrently evaluating
+    searches.  ``use_kernel=None`` auto-selects the Pallas per-row-layers
+    kernel on TPU and the jitted jnp oracle elsewhere (interpret-mode Pallas
+    would dominate CPU runs).
+    """
+
+    def __init__(self, cache: Optional[CostMemoCache] = None,
+                 window_ms: float = 2.0,
+                 use_kernel: Optional[bool] = None):
+        self.cache = cache if cache is not None else CostMemoCache()
+        self._window_s = max(window_ms, 0.0) / 1e3
+        self._use_kernel = (use_kernel if use_kernel is not None
+                            else jax.default_backend() == "tpu")
+        self._pending: List[_Item] = []
+        self._cv = threading.Condition()
+        self._closed = False
+        self._stats_lock = threading.Lock()
+        self._stats = {
+            "dispatches": 0, "fused_dispatches": 0, "items": 0,
+            "points": 0, "unique_points": 0, "fresh_points": 0,
+            "max_items_per_dispatch": 0, "max_points_per_dispatch": 0,
+        }
+        self._thread = threading.Thread(
+            target=self._loop, name="cost-eval-batcher", daemon=True)
+        self._thread.start()
+
+    # -- client side --------------------------------------------------------
+    def evaluate(self, layers, pe, kt, df, ecfg, budget) -> np.ndarray:
+        """Blocking genome-batch evaluation; safe from any thread.
+
+        layers: (N, NUM_FIELDS); pe/kt: (b, N) raw f32 values; df: scalar or
+        (b, N); ecfg: the request's EnvConfig; budget: the env's constraint
+        budget.  Returns (b,) f32 fitness (+inf = infeasible), bit-identical
+        to ``_decode_and_eval`` on the same genomes.
+        """
+        if self._closed:
+            raise RuntimeError("CostEvalBatcher is closed")
+        layers = np.asarray(layers, np.float32)
+        pe = np.asarray(pe, np.float32)
+        b, N = pe.shape
+        kt = np.broadcast_to(np.asarray(kt, np.float32), (b, N))
+        df = np.broadcast_to(np.asarray(df, np.float32), (b, N))
+        points = np.empty((b * N, ROW_WIDTH), np.float32)
+        points[:, :NUM_FIELDS] = np.broadcast_to(
+            layers, (b, N, NUM_FIELDS)).reshape(-1, NUM_FIELDS)
+        points[:, _PE_COL] = pe.ravel()
+        points[:, _KT_COL] = kt.ravel()
+        points[:, _DF_COL] = df.ravel()
+        item = _Item(points, (b, N), ecfg, np.float32(budget))
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("CostEvalBatcher is closed")
+            self._pending.append(item)
+            self._cv.notify()
+        item.event.wait()
+        if item.error is not None:
+            raise item.error
+        return item.fit
+
+    def stats(self) -> Dict[str, float]:
+        with self._stats_lock:
+            s = dict(self._stats)
+        s.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        return s
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
+    # -- dispatcher side ----------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._pending:
+                    return
+            if self._window_s:
+                time.sleep(self._window_s)
+            with self._cv:
+                items, self._pending = self._pending, []
+            if not items:
+                continue
+            try:
+                self._dispatch(items)
+            except BaseException as e:  # noqa: BLE001 -- never stall waiters
+                for it in items:
+                    if not it.event.is_set():
+                        it.error = e
+                        it.event.set()
+
+    def _dispatch(self, items: List[_Item]) -> None:
+        rows = (items[0].points if len(items) == 1
+                else np.concatenate([it.points for it in items], axis=0))
+        uniq, inv = np.unique(rows, axis=0, return_inverse=True)
+        keys = [u.tobytes() for u in uniq]
+        values, miss_index = self.cache.get_many(keys)
+        if miss_index:
+            fresh = self._eval_points(uniq[miss_index])
+            # Cache per-row COPIES: a row view would pin the whole dispatch's
+            # result array in memory for as long as any one point stays hot.
+            self.cache.put_many([keys[i] for i in miss_index],
+                                [f.copy() for f in fresh])
+            for i, v in zip(miss_index, fresh):
+                values[i] = v
+        per_point = np.stack(values)[inv]          # (P, 4)
+
+        with self._stats_lock:
+            s = self._stats
+            s["dispatches"] += 1
+            s["fused_dispatches"] += len(items) > 1
+            s["items"] += len(items)
+            s["points"] += len(rows)
+            s["unique_points"] += len(uniq)
+            s["fresh_points"] += len(miss_index)
+            s["max_items_per_dispatch"] = max(
+                s["max_items_per_dispatch"], len(items))
+            s["max_points_per_dispatch"] = max(
+                s["max_points_per_dispatch"], len(rows))
+
+        off = 0
+        for it in items:
+            n = it.points.shape[0]
+            vals = per_point[off:off + n].reshape(it.shape + (4,))
+            off += n
+            fit = _agg_fn(it.agg_key)(jnp.asarray(vals), it.budget)
+            it.fit = np.asarray(fit)
+            it.event.set()
+
+    def _eval_points(self, rows: np.ndarray) -> np.ndarray:
+        """Evaluate (M, ROW_WIDTH) fresh points -> (M, 4) f32 costs."""
+        M = rows.shape[0]
+        if self._use_kernel:
+            from repro.kernels import ops
+
+            # Tile the flat point list into the kernel's (B', TN) lanes.
+            from repro.kernels.costmodel_eval import TN
+            Mp = -(-M // TN) * TN
+            pad = np.ones((Mp - M, ROW_WIDTH), np.float32)
+            pad[:, NUM_FIELDS - 1] = 0.0            # repeat=0: benign rows
+            rp = np.concatenate([rows, pad], axis=0) if Mp > M else rows
+            lat, en, area, pw = ops.batched_cost_multi(
+                rp[:, :NUM_FIELDS].reshape(-1, TN, NUM_FIELDS),
+                rp[:, _PE_COL].reshape(-1, TN),
+                rp[:, _KT_COL].reshape(-1, TN),
+                rp[:, _DF_COL].reshape(-1, TN))
+            out = np.stack([np.asarray(lat), np.asarray(en),
+                            np.asarray(area), np.asarray(pw)],
+                           axis=-1).reshape(Mp, 4)
+            return out[:M]
+        # jnp-oracle path: pad to pow2 buckets to bound recompiles.
+        Mp = _next_pow2(M)
+        rp = np.ones((Mp, ROW_WIDTH), np.float32)
+        rp[:M] = rows
+        out = _flat_cost(rp[:, :NUM_FIELDS], rp[:, _PE_COL],
+                         rp[:, _KT_COL], rp[:, _DF_COL])
+        return np.asarray(out)[:M]

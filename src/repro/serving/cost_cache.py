@@ -1,0 +1,97 @@
+"""Cost-model memo cache: per-point results shared across searches.
+
+The cache key is one *point* of the cost model -- ``(layer descriptor,
+dataflow, PE, buffer)`` packed as the raw float32 bytes of the row -- and the
+value is the point's ``(latency, energy, area, power)`` 4-vector.  Keying on
+the raw model inputs (not on a workload name or an objective) is what lets
+hits cross user boundaries: two users searching mobilenet under different
+objectives, or two different workloads that share a layer shape, reuse each
+other's evaluations.  The per-layer action space is small (``levels**2``
+(PE, Buf) pairs per layer per dataflow), so popular workloads saturate the
+cache after a few thousand samples and later searches evaluate almost
+nothing fresh.
+
+Thread-safe LRU with hit/miss/eviction accounting; all counting happens at
+*unique-row* granularity (the batcher dedupes duplicates inside a dispatch
+before consulting the cache -- see ``CostEvalBatcher``).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class CostMemoCache:
+    """LRU memo of per-point cost evaluations.
+
+    Keys are ``bytes`` (the packed f32 point row); values are ``(4,)``
+    float32 arrays ``[latency, energy, area, power]``.
+    """
+
+    def __init__(self, capacity: int = 2 ** 20):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._data: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def get_many(self, keys) -> tuple:
+        """Look up a batch of keys under one lock acquisition.
+
+        Returns (values, miss_index): ``values`` is a list aligned with
+        ``keys`` (None where missing); ``miss_index`` the positions to
+        evaluate.  Counts one hit/miss per key.
+        """
+        values = []
+        miss_index = []
+        with self._lock:
+            for i, k in enumerate(keys):
+                v = self._data.get(k)
+                if v is None:
+                    self.misses += 1
+                    miss_index.append(i)
+                else:
+                    self.hits += 1
+                    self._data.move_to_end(k)
+                values.append(v)
+        return values, miss_index
+
+    def put_many(self, keys, vals: np.ndarray) -> None:
+        """Insert key->(4,) rows; evicts least-recently-used past capacity."""
+        with self._lock:
+            for k, v in zip(keys, vals):
+                self._data[k] = v
+                self._data.move_to_end(k)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "entries": len(self._data),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hit_rate,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()

@@ -1,0 +1,257 @@
+"""ConfuciuX-as-a-service: concurrent resource-assignment searches.
+
+``SearchService`` accepts any number of unified-API :class:`SearchRequest`\\ s
+and multiplexes them onto shared hardware:
+
+  * every request runs on a worker-pool thread through the SAME registry
+    adapters as ``api.run_search`` -- outcomes are identical to serial runs;
+  * the host-loop methods (``random``, ``grid``, ``bo``) route their genome
+    evaluations through one shared :class:`CostEvalBatcher`, so N users'
+    searches produce one fused dispatch stream and share the per-point
+    :class:`CostMemoCache` (popular workloads re-evaluate almost nothing);
+  * the chunked JAX engines (``reinforce``, ``two_stage``, ``a2c``, ``ppo2``,
+    ``fanout``) interleave at chunk granularity -- XLA releases the GIL
+    during compile and execute -- and stream per-request progress through
+    the service's wrapper, which doubles as the cancellation point;
+  * ``ticket.cancel()`` stops a search at its next progress chunk (chunked
+    engines) or next evaluation batch (batched methods); a cancelled request
+    never stalls the batcher -- its in-flight points are simply computed and
+    dropped.
+
+Typical use::
+
+    from repro import api
+    from repro.serving import SearchService
+
+    with SearchService() as svc:
+        tickets = [svc.submit(api.SearchRequest(workload="mobilenet_v2",
+                                                eps=2000, method="random",
+                                                seed=u))
+                   for u in range(16)]
+        outs = [t.result() for t in tickets]
+        print(svc.stats()["cache_hit_rate"])
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api import registry as api_registry
+from repro.api import types as api_types
+from repro.core import env as env_lib
+from repro.serving.batcher import CostEvalBatcher
+from repro.serving.cost_cache import CostMemoCache
+
+
+class SearchCancelled(Exception):
+    """Raised inside a worker when its ticket was cancelled mid-search."""
+
+
+# Methods whose host-side eval loop accepts an injected ``eval_fn`` and can
+# therefore be fused by the cross-request batcher.  The RL family and GA keep
+# their env-in-the-graph engines (the whole search is one XLA program) and
+# multiplex at chunk granularity instead.
+BATCHED_METHODS = ("random", "grid", "bo")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    max_workers: int = 8          # concurrent searches in flight
+    cache_entries: int = 2 ** 20  # per-point memo capacity
+    window_ms: float = 2.0        # batcher accumulation window
+    use_kernel: Optional[bool] = None   # None: Pallas kernel on TPU only
+    batched_methods: Tuple[str, ...] = BATCHED_METHODS
+    default_progress_every: int = 200   # service-side chunking when the
+    #                                     request carries no callback
+
+
+class SearchTicket:
+    """Handle for one submitted search: result / progress / cancellation."""
+
+    def __init__(self, uid: int, request: api_types.SearchRequest):
+        self.uid = uid
+        self.request = request
+        self.status = "queued"     # queued|running|done|cancelled|failed
+        self.trials: List[api_types.Trial] = []
+        self.submitted_at = time.time()
+        self.wall_seconds = 0.0
+        self._outcome: Optional[api_types.SearchOutcome] = None
+        self._error: Optional[BaseException] = None
+        self._done = threading.Event()
+        self._cancel = threading.Event()
+
+    # -- client side --------------------------------------------------------
+    def cancel(self) -> None:
+        """Request cancellation; takes effect at the next chunk/batch."""
+        self._cancel.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancel.is_set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None
+               ) -> api_types.SearchOutcome:
+        """Block for the outcome; raises SearchCancelled / the run's error."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"search {self.uid} still running")
+        if self._error is not None:
+            raise self._error
+        return self._outcome
+
+    # -- service side -------------------------------------------------------
+    def _finish(self, status: str, outcome=None, error=None) -> None:
+        self.status = status
+        self._outcome = outcome
+        self._error = error
+        self.wall_seconds = time.time() - self.submitted_at
+        self._done.set()
+
+
+class SearchService:
+    """Multiplexes concurrent SearchRequests onto shared hardware."""
+
+    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        self.cfg = cfg
+        self.cache = CostMemoCache(cfg.cache_entries)
+        self.batcher = CostEvalBatcher(self.cache, window_ms=cfg.window_ms,
+                                       use_kernel=cfg.use_kernel)
+        self._pool = ThreadPoolExecutor(
+            max_workers=cfg.max_workers, thread_name_prefix="search-worker")
+        self._uids = itertools.count()
+        self._lock = threading.Lock()
+        self._counts = {"submitted": 0, "completed": 0, "cancelled": 0,
+                        "failed": 0}
+        # (layer bytes, EnvConfig) -> (layers, pe_table, kt_table, budget):
+        # popular queries skip re-deriving the platform budget (the
+        # baseline engine still builds its own env internally).
+        self._env_memo: Dict[tuple, tuple] = {}
+        self._closed = False
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, request: api_types.SearchRequest) -> SearchTicket:
+        """Enqueue one search; returns immediately with a ticket."""
+        if self._closed:
+            raise RuntimeError("SearchService is closed")
+        ticket = SearchTicket(next(self._uids), request)
+        with self._lock:
+            self._counts["submitted"] += 1
+        self._pool.submit(self._run, ticket)
+        return ticket
+
+    def run_all(self, requests: Sequence[api_types.SearchRequest]
+                ) -> List[api_types.SearchOutcome]:
+        """Submit a batch of requests and block for all outcomes (in order)."""
+        tickets = [self.submit(r) for r in requests]
+        return [t.result() for t in tickets]
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            s = dict(self._counts)
+        s.update(self.batcher.stats())
+        return s
+
+    def close(self) -> None:
+        self._closed = True
+        self._pool.shutdown(wait=True)
+        self.batcher.close()
+
+    def __enter__(self) -> "SearchService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker -------------------------------------------------------------
+    def _run(self, ticket: SearchTicket) -> None:
+        try:
+            if ticket.cancelled:
+                raise SearchCancelled(f"search {ticket.uid} cancelled")
+            ticket.status = "running"
+            sub = self._instrument(ticket)
+            out = api_registry.run_search(sub)
+            ticket._finish("done", outcome=out)
+            key = "completed"
+        except SearchCancelled as e:
+            ticket._finish("cancelled", error=e)
+            key = "cancelled"
+        except BaseException as e:  # noqa: BLE001 -- reported via ticket
+            ticket._finish("failed", error=e)
+            key = "failed"
+        with self._lock:
+            self._counts[key] += 1
+
+    def _instrument(self, ticket: SearchTicket) -> api_types.SearchRequest:
+        """Wrap the request with progress recording, cancellation and --
+        for batchable methods -- the shared-batcher eval_fn."""
+        request = ticket.request
+        user_cb = request.on_progress
+
+        def on_progress(trial: api_types.Trial) -> None:
+            ticket.trials.append(trial)
+            if ticket.cancelled:
+                raise SearchCancelled(f"search {ticket.uid} cancelled")
+            if user_cb is not None:
+                user_cb(trial)
+
+        progress_every = (request.progress_every if user_cb is not None
+                          else self.cfg.default_progress_every)
+        options = dict(request.options)
+        method = api_registry.get_optimizer(request.method).name
+        if method in self.cfg.batched_methods:
+            options["eval_fn"] = self._make_eval_fn(ticket)
+        return dataclasses.replace(
+            request, options=options, on_progress=on_progress,
+            progress_every=progress_every)
+
+    def _make_eval_fn(self, ticket: SearchTicket):
+        """Drop-in for the baselines' jitted ``_decode_and_eval`` that
+        routes through the shared batcher (decode stays exact: the same f32
+        level tables the serial engine gathers from)."""
+        request = ticket.request
+        ecfg = request.env
+        layers, pe_table, kt_table, budget = self._decode_tables(request)
+        batcher = self.batcher
+
+        def eval_fn(genomes):
+            if ticket.cancelled:
+                raise SearchCancelled(f"search {ticket.uid} cancelled")
+            g = np.asarray(genomes)
+            pe = pe_table[g[..., 0]]
+            kt = kt_table[g[..., 1]]
+            fit = batcher.evaluate(layers, pe, kt,
+                                   np.float32(ecfg.dataflow), ecfg, budget)
+            return fit, pe, kt
+
+        return eval_fn
+
+    def _decode_tables(self, request: api_types.SearchRequest):
+        """(layers, pe/kt tables, budget) for eval_fn decode, memoized per
+        (workload, EnvConfig) so popular queries pay the platform-budget
+        derivation (``max_constraint``: a whole-model cost eval) once."""
+        from repro.costmodel.layers import layers_to_array
+
+        wl = request.resolve_workload()
+        arr = (layers_to_array(wl) if isinstance(wl, (list, tuple))
+               else np.asarray(wl))
+        key = (arr.astype(np.float32).tobytes(), request.env)
+        with self._lock:
+            hit = self._env_memo.get(key)
+        if hit is not None:
+            return hit
+        env = env_lib.make_env(wl, request.env)
+        entry = (np.asarray(env.layers, np.float32),
+                 np.asarray(env.pe_table, np.float32),
+                 np.asarray(env.kt_table, np.float32),
+                 np.float32(env.budget))
+        with self._lock:
+            self._env_memo[key] = entry
+        return entry

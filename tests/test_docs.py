@@ -1,0 +1,62 @@
+"""Docs stay truthful: intra-repo links resolve, api.md examples run.
+
+Thin wrappers around tools/check_docs.py (the same tool CI's ``docs`` job
+runs) so the tier-1 suite catches documentation drift locally too.
+"""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_tree_exists():
+    for f in ("architecture.md", "search_service.md", "paper_map.md",
+              "api.md"):
+        assert os.path.isfile(os.path.join(REPO, "docs", f)), f
+
+
+def test_no_broken_intra_repo_links():
+    assert check_docs.check_links() == []
+
+
+def test_paper_map_covers_every_benchmark():
+    """Every benchmarks/bench_*.py module must appear in docs/paper_map.md."""
+    with open(os.path.join(REPO, "docs", "paper_map.md")) as f:
+        text = f.read()
+    benches = sorted(f for f in os.listdir(os.path.join(REPO, "benchmarks"))
+                     if f.startswith("bench_") and f.endswith(".py"))
+    missing = [b for b in benches if b not in text]
+    assert not missing, f"paper_map.md misses benchmarks: {missing}"
+
+
+def test_api_md_python_blocks_execute():
+    """The fenced examples in docs/api.md are the API's executable spec."""
+    errors = check_docs.run_doctests()
+    assert errors == [], errors
+
+
+def test_api_md_documents_every_registered_method():
+    from repro import api
+
+    with open(os.path.join(REPO, "docs", "api.md")) as f:
+        text = f.read()
+    missing = [n for n in api.list_optimizers() if f"`{n}`" not in text]
+    assert not missing, f"api.md misses methods: {missing}"
+
+
+@pytest.mark.parametrize("doc", ["architecture.md", "search_service.md"])
+def test_named_modules_exist(doc):
+    """Back-tick'd repro module paths mentioned in the docs must import."""
+    import importlib
+    import re
+
+    with open(os.path.join(REPO, "docs", doc)) as f:
+        text = f.read()
+    for mod in set(re.findall(r"`(repro(?:\.\w+)+)`", text)):
+        importlib.import_module(mod.rsplit(".", 1)[0]
+                                if mod.count(".") > 1 else mod)

@@ -52,6 +52,39 @@ def test_costmodel_kernel_shapes(B, N):
                                    rtol=1e-5, atol=1e-2)
 
 
+@pytest.mark.parametrize("B,N", [(1, 1), (3, 7), (9, 130), (16, 128)])
+def test_costmodel_multi_kernel_shapes(B, N):
+    """Per-row-layers kernel (multi-tenant batches) vs its oracle."""
+    rng = np.random.default_rng(B * 71 + N)
+    layers = np.stack([_rand_layers(rng, N) for _ in range(B)])
+    key = jax.random.PRNGKey(B + N)
+    pe = jax.random.randint(key, (B, N), 1, 161).astype(jnp.float32)
+    kt = jax.random.randint(jax.random.fold_in(key, 1), (B, N), 1,
+                            17).astype(jnp.float32)
+    df = jax.random.randint(jax.random.fold_in(key, 2), (B, N), 0,
+                            3).astype(jnp.float32)
+    got = ops.batched_cost_multi(layers, pe, kt, df, use_kernel=True)
+    want = ops.batched_cost_multi(layers, pe, kt, df, use_kernel=False)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-2)
+
+
+def test_costmodel_multi_kernel_matches_broadcast_kernel():
+    """With every row carrying the SAME workload, multi == broadcast."""
+    rng = np.random.default_rng(0)
+    layers = _rand_layers(rng, 9)
+    B = 5
+    pe = rng.integers(1, 161, size=(B, 9)).astype(np.float32)
+    kt = rng.integers(1, 17, size=(B, 9)).astype(np.float32)
+    df = rng.integers(0, 3, size=(B, 9)).astype(np.float32)
+    multi = ops.batched_cost_multi(np.broadcast_to(layers, (B,) + layers.shape),
+                                   pe, kt, df, use_kernel=False)
+    broad = ops.batched_cost(layers, pe, kt, df, use_kernel=False)
+    for m, b in zip(multi, broad):
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(b))
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10_000), B=st.integers(1, 12),
        N=st.integers(1, 64))

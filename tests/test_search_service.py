@@ -1,0 +1,259 @@
+"""Search service: serial parity, cache accounting, cancellation, batcher.
+
+The load-bearing guarantee is EXACTNESS: a search routed through the
+service -- cross-request fusion, per-point dedup and memo-cache hits
+included -- returns bit-identical outcomes to the same ``api.run_search``
+call executed serially.  Everything else (hit/miss bookkeeping, ticket
+lifecycle, a cancelled request never stalling the batcher) is what makes
+the service operable.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import env as env_lib
+from repro.serving import (CostEvalBatcher, CostMemoCache, SearchCancelled,
+                           SearchService, ServiceConfig)
+from repro.serving.batcher import ROW_WIDTH
+
+ECFG = env_lib.EnvConfig(platform="cloud")
+
+
+def _req(method, eps=200, seed=0, wl="ncf", **kw):
+    return api.SearchRequest(workload=wl, env=ECFG, eps=eps, seed=seed,
+                             method=method, **kw)
+
+
+@pytest.fixture
+def svc():
+    s = SearchService(ServiceConfig(max_workers=4,
+                                    default_progress_every=50))
+    yield s
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# Exact parity with serial dispatch.
+# ---------------------------------------------------------------------------
+def test_concurrent_batched_methods_identical_to_serial(svc):
+    """random/grid/bo through the fused batcher == serial, bit for bit."""
+    reqs = [_req(m, eps=200, seed=3) for m in ("random", "grid", "bo")]
+    serial = [api.run_search(_req(m, eps=200, seed=3))
+              for m in ("random", "grid", "bo")]
+    tickets = [svc.submit(r) for r in reqs]
+    for t, want in zip(tickets, serial):
+        got = t.result(timeout=300)
+        assert got.best_value == want.best_value
+        assert got.history.tobytes() == want.history.tobytes()
+        np.testing.assert_array_equal(got.pe, want.pe)
+        np.testing.assert_array_equal(got.kt, want.kt)
+    assert svc.stats()["completed"] == 3
+    # The fused path actually ran: points flowed through the batcher.
+    assert svc.stats()["points"] > 0
+
+
+def test_chunked_engine_identical_to_serial(svc):
+    """reinforce multiplexes at chunk granularity, still bit-identical."""
+    want = api.run_search(_req("reinforce", eps=60, seed=7))
+    got = svc.submit(_req("reinforce", eps=60, seed=7)).result(timeout=300)
+    assert got.best_value == pytest.approx(want.best_value)
+    np.testing.assert_allclose(got.history, want.history)
+
+
+def test_same_seed_concurrent_duplicates_agree(svc):
+    """Identical queries racing each other return identical outcomes."""
+    tickets = [svc.submit(_req("random", eps=300, seed=5)) for _ in range(4)]
+    outs = [t.result(timeout=300) for t in tickets]
+    for o in outs[1:]:
+        assert o.best_value == outs[0].best_value
+        assert o.history.tobytes() == outs[0].history.tobytes()
+
+
+def test_run_all_preserves_request_order(svc):
+    outs = svc.run_all([_req("random", eps=150, seed=s) for s in range(3)])
+    assert [o.seed for o in outs] == [0, 1, 2]
+    assert all(o.method == "random" for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Cache accounting.
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_accounting_is_consistent(svc):
+    svc.submit(_req("random", eps=200, seed=1)).result(timeout=300)
+    s1 = svc.stats()
+    # Every unique point was either a hit or a fresh (miss) evaluation.
+    assert s1["cache_hits"] + s1["cache_misses"] == s1["unique_points"]
+    assert s1["cache_misses"] == s1["fresh_points"] > 0
+    assert s1["cache_entries"] == s1["cache_misses"]  # nothing evicted
+
+    # Resubmitting the identical query evaluates NOTHING fresh.
+    svc.submit(_req("random", eps=200, seed=1)).result(timeout=300)
+    s2 = svc.stats()
+    assert s2["cache_misses"] == s1["cache_misses"]
+    assert s2["fresh_points"] == s1["fresh_points"]
+    assert s2["cache_hits"] > s1["cache_hits"]
+    assert s2["cache_hit_rate"] > s1["cache_hit_rate"]
+
+
+def test_cache_shared_across_objectives():
+    """The point key excludes the objective: latency and energy users on
+    the same workload reuse each other's evaluations."""
+    svc = SearchService(ServiceConfig(max_workers=2))
+    try:
+        svc.submit(_req("random", eps=200, seed=2)).result(timeout=300)
+        misses = svc.stats()["cache_misses"]
+        env2 = env_lib.EnvConfig(platform="cloud", objective="energy",
+                                 constraint="power")
+        svc.submit(api.SearchRequest(workload="ncf", env=env2, eps=200,
+                                     seed=2, method="random")
+                   ).result(timeout=300)
+        assert svc.stats()["cache_misses"] == misses  # same points, 0 fresh
+    finally:
+        svc.close()
+
+
+def test_cache_lru_eviction_accounting():
+    cache = CostMemoCache(capacity=4)
+    keys = [bytes([i]) for i in range(6)]
+    vals = np.arange(24, dtype=np.float32).reshape(6, 4)
+    cache.put_many(keys, list(vals))
+    assert len(cache) == 4 and cache.evictions == 2
+    values, miss = cache.get_many(keys)
+    assert miss == [0, 1]                      # oldest two evicted
+    np.testing.assert_array_equal(values[5], vals[5])
+    assert cache.hits == 4 and cache.misses == 2
+
+
+def test_cache_rejects_bad_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        CostMemoCache(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation.
+# ---------------------------------------------------------------------------
+def test_cancel_mid_stream_chunked_engine(svc):
+    got = []
+    t = svc.submit(_req("reinforce", eps=100000, on_progress=got.append,
+                        progress_every=10))
+    deadline = time.time() + 120
+    while not got and time.time() < deadline:
+        time.sleep(0.02)
+    assert got, "no progress streamed before deadline"
+    t.cancel()
+    with pytest.raises(SearchCancelled):
+        t.result(timeout=120)
+    assert t.status == "cancelled"
+    assert svc.stats()["cancelled"] == 1
+
+
+def test_cancelled_request_does_not_stall_batcher(svc):
+    """Cancel a batched-method request mid-flight; the batcher keeps
+    serving everyone else and fresh requests still complete."""
+    victim = svc.submit(_req("random", eps=500000, seed=9))
+    survivor = svc.submit(_req("random", eps=200, seed=4))
+    deadline = time.time() + 120
+    while svc.stats()["dispatches"] == 0 and time.time() < deadline:
+        time.sleep(0.02)
+    victim.cancel()
+    with pytest.raises(SearchCancelled):
+        victim.result(timeout=120)
+    want = api.run_search(_req("random", eps=200, seed=4))
+    got = survivor.result(timeout=120)
+    assert got.best_value == want.best_value
+    late = svc.submit(_req("grid", eps=150, seed=1)).result(timeout=120)
+    assert late.eps == 150
+    assert svc.stats()["cancelled"] == 1
+    assert svc.stats()["completed"] == 2
+
+
+def test_cancel_while_queued_never_runs():
+    """A ticket cancelled before a worker picks it up is never executed."""
+    svc = SearchService(ServiceConfig(max_workers=1))
+    try:
+        blocker = svc.submit(_req("random", eps=2000, seed=0))
+        queued = svc.submit(_req("random", eps=150, seed=1))
+        queued.cancel()          # still waiting behind the 1-worker pool
+        with pytest.raises(SearchCancelled):
+            queued.result(timeout=300)
+        assert queued.status == "cancelled"
+        assert blocker.result(timeout=300).feasible
+        s = svc.stats()
+        assert s["cancelled"] == 1 and s["completed"] == 1
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Ticket / service lifecycle.
+# ---------------------------------------------------------------------------
+def test_failed_request_reports_error_not_hang(svc):
+    t = svc.submit(_req("random", eps=100, wl="no_such_workload"))
+    with pytest.raises(Exception, match="no_such_workload"):
+        t.result(timeout=120)
+    assert t.status == "failed"
+    assert svc.stats()["failed"] == 1
+
+
+def test_progress_recorded_on_ticket(svc):
+    t = svc.submit(_req("reinforce", eps=60))
+    t.result(timeout=300)
+    steps = [tr.step for tr in t.trials]
+    assert steps and steps == sorted(steps) and steps[-1] == 60
+
+
+def test_closed_service_rejects_submissions():
+    svc = SearchService(ServiceConfig(max_workers=1))
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(_req("random"))
+
+
+# ---------------------------------------------------------------------------
+# Batcher internals.
+# ---------------------------------------------------------------------------
+def test_batcher_direct_matches_genome_cost():
+    """CostEvalBatcher.evaluate == the serial jitted genome evaluation."""
+    from repro.core.baselines import _decode_and_eval
+    import jax
+    import jax.numpy as jnp
+
+    wl = api.SearchRequest(workload="ncf", env=ECFG).resolve_workload()
+    env = env_lib.make_env(wl, ECFG)
+    rng = np.random.default_rng(0)
+    g = rng.integers(0, ECFG.levels, size=(64, env.num_layers, 2))
+    want, _, _ = jax.jit(lambda g: _decode_and_eval(env, ECFG, g))(
+        jnp.asarray(g))
+    pe = np.asarray(env.pe_table)[g[..., 0]]
+    kt = np.asarray(env.kt_table)[g[..., 1]]
+    b = CostEvalBatcher(window_ms=0.0)
+    try:
+        got = b.evaluate(np.asarray(env.layers), pe, kt,
+                         np.float32(ECFG.dataflow), ECFG,
+                         np.float32(env.budget))
+        assert got.tobytes() == np.asarray(want).tobytes()
+        # A second identical call is served fully from cache -- still exact.
+        again = b.evaluate(np.asarray(env.layers), pe, kt,
+                           np.float32(ECFG.dataflow), ECFG,
+                           np.float32(env.budget))
+        assert again.tobytes() == got.tobytes()
+        assert b.stats()["fresh_points"] == b.stats()["cache_misses"]
+    finally:
+        b.close()
+
+
+def test_batcher_point_row_width_covers_all_fields():
+    from repro.costmodel.layers import NUM_FIELDS
+
+    assert ROW_WIDTH == NUM_FIELDS + 3  # fields + pe + kt + df
+
+
+def test_closed_batcher_rejects_evaluations():
+    b = CostEvalBatcher()
+    b.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        b.evaluate(np.ones((1, 8), np.float32), np.ones((1, 1), np.float32),
+                   np.ones((1, 1), np.float32), np.float32(0), ECFG,
+                   np.float32(1.0))

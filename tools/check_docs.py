@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Docs checker: intra-repo links + executable ``python`` blocks.
+
+    PYTHONPATH=src python tools/check_docs.py [--links-only]
+
+Two checks, both enforced in CI (the ``docs`` job) and in tier-1
+(tests/test_docs.py):
+
+1. **Links.** Every markdown link in README.md, docs/*.md and results/*.md
+   that points inside the repo must resolve to an existing file (anchors
+   are stripped; http(s)/mailto links are ignored).
+2. **Doctests.** Every fenced ``` ```python ``` ``` block in docs/*.md runs,
+   in file order, in ONE shared namespace per file (notebook-style, so
+   later blocks may use earlier imports/variables).  Blocks tagged
+   ``` ```python no-run ``` ``` are skipped.  A failing assert or exception
+   fails the check -- documented API behavior cannot silently drift.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\S*)\s*(.*)$")
+
+
+def _md_files():
+    files = [os.path.join(REPO, "README.md")]
+    for sub in ("docs", "results"):
+        d = os.path.join(REPO, sub)
+        if os.path.isdir(d):
+            files.extend(os.path.join(d, f) for f in sorted(os.listdir(d))
+                         if f.endswith(".md"))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_links() -> list:
+    errors = []
+    for path in _md_files():
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, REPO)
+        with open(path) as f:
+            text = f.read()
+        # Drop fenced code blocks -- link syntax inside code is not a link.
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = target.split("#")[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+    return errors
+
+
+def _python_blocks(path: str):
+    """Yield (start_line, code) for runnable ```python fences."""
+    blocks = []
+    in_block, tag, buf, start = False, "", [], 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            m = FENCE_RE.match(line.strip())
+            if m and not in_block:
+                in_block, tag, buf, start = True, " ".join(
+                    x for x in (m.group(1), m.group(2)) if x), [], lineno + 1
+            elif m and in_block:
+                if tag.split()[0:1] == ["python"] and "no-run" not in tag:
+                    blocks.append((start, "".join(buf)))
+                in_block = False
+            elif in_block:
+                buf.append(line)
+    return blocks
+
+
+def run_doctests() -> list:
+    errors = []
+    docs_dir = os.path.join(REPO, "docs")
+    if not os.path.isdir(docs_dir):
+        return errors
+    for fname in sorted(os.listdir(docs_dir)):
+        if not fname.endswith(".md"):
+            continue
+        path = os.path.join(docs_dir, fname)
+        blocks = _python_blocks(path)
+        if not blocks:
+            continue
+        ns = {"__name__": f"docs.{fname}"}
+        for start, code in blocks:
+            print(f"  running docs/{fname}:{start} "
+                  f"({len(code.splitlines())} lines)", flush=True)
+            try:
+                exec(compile(code, f"docs/{fname}:{start}", "exec"), ns)
+            except Exception as e:  # noqa: BLE001
+                errors.append(f"docs/{fname}:{start}: {type(e).__name__}: "
+                              f"{e}")
+                break   # later blocks in this file depend on earlier ones
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing the docs' python blocks")
+    args = ap.parse_args(argv)
+
+    errors = check_links()
+    n_files = len(_md_files())
+    print(f"checked links in {n_files} markdown files: "
+          f"{len(errors)} broken")
+    if not args.links_only:
+        errors += run_doctests()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print("docs check " + ("FAILED" if errors else "OK"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
