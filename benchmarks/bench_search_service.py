@@ -3,20 +3,23 @@
 A fleet of "users" submits the SAME kind of traffic a deployed ConfuciuX
 endpoint would see: a mix of methods over a couple of popular workloads,
 with some users submitting identical queries (resubmissions / defaults).
-We measure:
+Since the chunked-GA/SA work, the mix includes ``ga`` and ``sa`` -- GA
+populations are the largest eval batches in the system and now route
+through the cross-request batcher like everyone else.  We measure:
 
-  * serial   -- ``api.run_search`` over the requests one after another,
-                every search driving its own jit-dispatch loop (the PR-1
-                deployment story);
-  * service  -- the same requests through :class:`SearchService`: one
-                worker-pool, one fused cost-eval dispatch stream, one
-                shared per-point memo cache.
+  * serial    -- ``api.run_search`` over the requests one after another,
+                 every search driving its own jit-dispatch loop (the PR-1
+                 deployment story);
+  * service   -- the same requests through :class:`SearchService` with the
+                 single-thread fused dispatcher (the PR-3 configuration);
+  * service (pool) -- the same service with ``dispatch_workers > 1``: up to
+                 N fused dispatches execute concurrently.
 
-Every outcome is asserted bit-identical between the two paths (the service
-is an execution strategy, not an approximation).  Reported: wall-clock
-speedup, searches/sec, cache hit rate, and batcher fusion stats.  A second
-warm wave (the same traffic again) shows the steady-state regime where the
-cache has saturated the popular workloads' point space.
+Every outcome is asserted bit-identical across all paths (the service is an
+execution strategy, not an approximation).  Reported: wall-clock speedup,
+searches/sec, cache hit rate, and batcher fusion stats.  A warm wave (the
+same traffic again) shows the steady-state regime where the cache has
+saturated the popular workloads' point space.
 """
 from __future__ import annotations
 
@@ -28,19 +31,33 @@ from benchmarks import common
 from repro import api
 from repro.serving import SearchService, ServiceConfig
 
+POOL_WORKERS = 2  # sized for the 2-core dev container; raise on real hosts
+
 
 def _mix(eps: int, n_users: int):
     """n_users requests: methods x workloads round-robin, 2 users/seed."""
     workloads = ("ncf", "mobilenet_v2")
-    methods = ("random", "grid", "bo", "random")
+    methods = ("random", "grid", "bo", "ga", "sa", "random", "ga", "sa")
     reqs = []
     for u in range(n_users):
+        method = methods[u % len(methods)]
         reqs.append(api.SearchRequest(
             workload=workloads[u % 2],
             env=api.EnvConfig(platform="cloud"),
             eps=eps, seed=u // 2,             # 2 users share each seed
-            method=methods[u % 4]))
+            method=method,
+            options={"population": 50} if method == "ga" else {}))
     return reqs
+
+
+def _assert_identical(serial, outs, exact):
+    for a, b in zip(serial, outs):
+        if exact:
+            assert a.best_value == b.best_value, \
+                (a.method, a.best_value, b.best_value)
+            assert np.array_equal(a.history, b.history), a.method
+        else:
+            np.testing.assert_allclose(a.best_value, b.best_value, rtol=1e-5)
 
 
 def run(budget_name: str = "quick") -> dict:
@@ -51,6 +68,14 @@ def run(budget_name: str = "quick") -> dict:
     with common.Timer() as t_serial:
         serial = [api.run_search(r) for r in reqs]
 
+    # CPU/GPU route the batcher through the jnp oracle -> bit-exact parity.
+    # On TPU the auto-selected Pallas kernel agrees with the oracle only to
+    # float32 allclose (same status as every kernel/oracle pair), so the
+    # parity assertion relaxes accordingly.
+    import jax
+
+    exact = jax.default_backend() != "tpu"
+
     svc = SearchService(ServiceConfig(max_workers=n_users))
     with common.Timer() as t_cold:
         cold = svc.run_all(_mix(eps, n_users))
@@ -59,27 +84,26 @@ def run(budget_name: str = "quick") -> dict:
         warm = svc.run_all(_mix(eps, n_users))
     stats_warm = svc.stats()
     svc.close()
+    _assert_identical(serial, cold, exact)
+    _assert_identical(serial, warm, exact)
 
-    # CPU/GPU route the batcher through the jnp oracle -> bit-exact parity.
-    # On TPU the auto-selected Pallas kernel agrees with the oracle only to
-    # float32 allclose (same status as every kernel/oracle pair), so the
-    # parity assertion relaxes accordingly.
-    import jax
+    pool = SearchService(ServiceConfig(max_workers=n_users,
+                                       dispatch_workers=POOL_WORKERS))
+    with common.Timer() as t_pool_cold:
+        pool_cold = pool.run_all(_mix(eps, n_users))
+    stats_pool_cold = pool.stats()
+    with common.Timer() as t_pool_warm:
+        pool_warm = pool.run_all(_mix(eps, n_users))
+    stats_pool = pool.stats()
+    pool.close()
+    _assert_identical(serial, pool_cold, exact)
+    _assert_identical(serial, pool_warm, exact)
 
-    exact = jax.default_backend() != "tpu"
-    for a, b, c in zip(serial, cold, warm):
-        for other in (b, c):
-            if exact:
-                assert a.best_value == other.best_value, \
-                    (a.method, a.best_value, other.best_value)
-                assert np.array_equal(a.history, other.history)
-            else:
-                np.testing.assert_allclose(a.best_value, other.best_value,
-                                           rtol=1e-5)
+    def warm_rate(warm_stats, cold_stats):
+        hits = warm_stats["cache_hits"] - cold_stats["cache_hits"]
+        misses = warm_stats["cache_misses"] - cold_stats["cache_misses"]
+        return hits / max(hits + misses, 1)
 
-    warm_hits = stats_warm["cache_hits"] - stats_cold["cache_hits"]
-    warm_misses = stats_warm["cache_misses"] - stats_cold["cache_misses"]
-    warm_rate = warm_hits / max(warm_hits + warm_misses, 1)
     rows = [
         ["serial", t_serial.seconds, 1.0, n_users / t_serial.seconds, None],
         ["service (cold cache)", t_cold.seconds,
@@ -87,37 +111,61 @@ def run(budget_name: str = "quick") -> dict:
          stats_cold["cache_hit_rate"]],
         ["service (warm cache)", t_warm.seconds,
          t_serial.seconds / t_warm.seconds, n_users / t_warm.seconds,
-         warm_rate],
+         warm_rate(stats_warm, stats_cold)],
+        [f"pool x{POOL_WORKERS} (cold cache)", t_pool_cold.seconds,
+         t_serial.seconds / t_pool_cold.seconds,
+         n_users / t_pool_cold.seconds, stats_pool_cold["cache_hit_rate"]],
+        [f"pool x{POOL_WORKERS} (warm cache)", t_pool_warm.seconds,
+         t_serial.seconds / t_pool_warm.seconds,
+         n_users / t_pool_warm.seconds,
+         warm_rate(stats_pool, stats_pool_cold)],
     ]
     common.print_table(
-        f"Search service: {n_users} concurrent searches, eps={eps}, "
-        f"identical outcomes vs serial (asserted)",
+        f"Search service: {n_users} concurrent searches (incl. ga/sa), "
+        f"eps={eps}, identical outcomes vs serial (asserted)",
         ["dispatch", "seconds", "speedup", "searches/sec", "cache hit rate"],
         rows)
     common.print_table(
         "Batcher fusion (cumulative)",
-        ["wave", "dispatches", "fused", "max fused reqs", "points",
-         "fresh evals"],
-        [["cold", stats_cold["dispatches"], stats_cold["fused_dispatches"],
+        ["config", "dispatches", "fused", "max fused reqs", "points",
+         "fresh evals", "max concurrent"],
+        [["single, cold", stats_cold["dispatches"],
+          stats_cold["fused_dispatches"],
           stats_cold["max_items_per_dispatch"], stats_cold["points"],
-          stats_cold["fresh_points"]],
-         ["cold+warm", stats_warm["dispatches"],
+          stats_cold["fresh_points"],
+          stats_cold["max_concurrent_dispatches"]],
+         ["single, cold+warm", stats_warm["dispatches"],
           stats_warm["fused_dispatches"],
           stats_warm["max_items_per_dispatch"], stats_warm["points"],
-          stats_warm["fresh_points"]]])
+          stats_warm["fresh_points"],
+          stats_warm["max_concurrent_dispatches"]],
+         [f"pool x{POOL_WORKERS}, cold+warm", stats_pool["dispatches"],
+          stats_pool["fused_dispatches"],
+          stats_pool["max_items_per_dispatch"], stats_pool["points"],
+          stats_pool["fresh_points"],
+          stats_pool["max_concurrent_dispatches"]]])
 
     return {
         "n_users": n_users, "eps": eps,
+        "pool_workers": POOL_WORKERS,
         "serial_seconds": t_serial.seconds,
         "service_cold_seconds": t_cold.seconds,
         "service_warm_seconds": t_warm.seconds,
+        "pool_cold_seconds": t_pool_cold.seconds,
+        "pool_warm_seconds": t_pool_warm.seconds,
         "speedup_cold": t_serial.seconds / t_cold.seconds,
         "speedup_warm": t_serial.seconds / t_warm.seconds,
+        "speedup_pool_cold": t_serial.seconds / t_pool_cold.seconds,
+        "speedup_pool_warm": t_serial.seconds / t_pool_warm.seconds,
         "searches_per_sec_warm": n_users / t_warm.seconds,
+        "searches_per_sec_pool_warm": n_users / t_pool_warm.seconds,
         "cache_hit_rate_cold": stats_cold["cache_hit_rate"],
-        "cache_hit_rate_warm_wave": warm_rate,
+        "cache_hit_rate_warm_wave": warm_rate(stats_warm, stats_cold),
+        "max_concurrent_dispatches_pool":
+            stats_pool["max_concurrent_dispatches"],
         "outcomes_identical": True,
-        "stats": stats_warm,
+        "stats_single": stats_warm,
+        "stats_pool": stats_pool,
     }
 
 

@@ -72,6 +72,9 @@ class GridOptimizer:
 
 @register("sa")
 class SimulatedAnnealingOptimizer:
+    """Chunked annealing: streams live, resumes, and accepts an injected
+    ``eval_fn`` so the search service batches its candidate evaluations."""
+
     name = "sa"
 
     def run(self, request: SearchRequest) -> SearchOutcome:
@@ -82,10 +85,25 @@ class SimulatedAnnealingOptimizer:
             step=opts.get("step", 1),
             decay=opts.get("decay", 0.999),
             seed=request.seed)
-        res = baselines.simulated_annealing(
-            request.resolve_workload(), request.env, eps=request.eps, cfg=cfg)
-        return _outcome(request, self.name, res.best_value, res.best_pe,
-                        res.best_kt, None, res.history, t0)
+        wl = request.resolve_workload()
+        env = env_lib.make_env(wl, request.env)
+        if request.on_progress is None:
+            chunk, on_chunk = None, None
+        else:
+            def on_chunk(state, hist, steps_done):
+                request.on_progress(Trial(
+                    min(steps_done, request.eps),
+                    float(np.min(hist)), float(state.best_fit)))
+
+            chunk = max(request.progress_every, 1)
+        state, hist = baselines.run_sa_search(
+            wl, request.env, eps=request.eps, cfg=cfg, chunk=chunk,
+            on_chunk=on_chunk, eval_fn=opts.get("eval_fn"), env=env)
+        pe, kt = baselines.sa_solution(env, state)
+        return _outcome(request, self.name, float(state.best_fit), pe, kt,
+                        None, hist, t0,
+                        extras={"steps": int(state.step)},
+                        streamed=request.on_progress is not None)
 
 
 @register("bo", aliases=("bayes",))
@@ -123,19 +141,42 @@ def _ga_cfg(request: SearchRequest) -> ga_lib.GAConfig:
 
 @register("ga")
 class GeneticAlgorithmOptimizer:
-    """Baseline GA; ``eps`` buys population * generations individuals."""
+    """Baseline GA; ``eps`` buys population * generations individuals.
+
+    Chunked like the RL family: the generation scan runs in
+    ``progress_every``-sized chunks when a callback is set (live streaming +
+    cancellation between chunks), and an injected ``eval_fn`` routes the
+    per-generation fitness batches through the search service's
+    cross-request batcher -- byte-identical outcomes either way.
+    """
 
     name = "ga"
 
     def run(self, request: SearchRequest) -> SearchOutcome:
         t0 = time.time()
         cfg = _ga_cfg(request)
-        res = ga_lib.baseline_ga(request.resolve_workload(), request.env, cfg)
-        trace = types.expand_trace(res.history, cfg.population)
-        return _outcome(request, self.name, res.best_value, res.best_pe,
-                        res.best_kt, res.best_df, trace, t0,
+        wl = request.resolve_workload()
+        env = env_lib.make_env(wl, request.env)
+        if request.on_progress is None:
+            chunk, on_chunk = None, None
+        else:
+            def on_chunk(state, hist, gens_done):
+                request.on_progress(Trial(
+                    min(gens_done * cfg.population, request.eps),
+                    float(np.min(hist)), float(state.best_val)))
+
+            chunk = max(request.progress_every // cfg.population, 1)
+        state, hist = ga_lib.run_ga_search(
+            wl, request.env, cfg, chunk=chunk, on_chunk=on_chunk,
+            eval_fn=request.options.get("eval_fn"), env=env)
+        pe, kt, df = ga_lib.ga_solution(env, request.env, state)
+        trace = types.expand_trace(hist, cfg.population)
+        return _outcome(request, self.name, float(state.best_val),
+                        np.asarray(pe), np.asarray(kt), np.asarray(df),
+                        trace, t0,
                         extras={"generations": cfg.generations,
-                                "population": cfg.population})
+                                "population": cfg.population},
+                        streamed=request.on_progress is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -216,10 +257,31 @@ class TwoStageOptimizer:
             seed=request.seed)
         pcfg = _policy_config(request.env, opts)
         chunk, on_chunk = _chunk_args(request, E)
+        if request.on_progress is None:
+            ga_chunk, ga_on_chunk = None, None
+        else:
+            # Stage-2 evaluations run past the eps budget, so its Trials
+            # stay pinned at step == eps; streaming them keeps the pipeline
+            # preemptible (and the ticket's trace honest) during the
+            # fine-tune instead of going dark after stage 1.
+            def ga_on_chunk(state, hist, gens_done):
+                request.on_progress(Trial(
+                    request.eps, float(np.min(hist)),
+                    min(float(state.best_val), seen_best[0])))
+
+            seen_best = [float("inf")]
+            user_on_chunk = on_chunk
+
+            def on_chunk(state, hist, epochs_done):  # noqa: F811
+                seen_best[0] = min(seen_best[0], float(state.best_value))
+                user_on_chunk(state, hist, epochs_done)
+
+            ga_chunk = max(request.progress_every // gcfg.population, 1)
         res = search_lib.confuciux_search(
             wl, request.env, rcfg, gcfg, pcfg,
             fine_tune=opts.get("fine_tune", True),
-            chunk=chunk, on_chunk=on_chunk)
+            chunk=chunk, on_chunk=on_chunk,
+            ga_chunk=ga_chunk, ga_on_chunk=ga_on_chunk)
         # Stage-2 GA evaluations happen after the eps budget; its gain is
         # reflected at the trace's final sample so history[-1] equals the
         # post-fine-tune best (full stage-2 curve: extras["ga_history"]).

@@ -9,7 +9,8 @@ feasible point was found -- exactly how Table IV reports failures.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import functools
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -123,9 +124,38 @@ class SAConfig:
     seed: int = 0
 
 
-def simulated_annealing(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
-                        cfg: SAConfig = SAConfig()) -> BaselineResult:
-    env = env_lib.make_env(workload, ecfg)
+class SAState(NamedTuple):
+    """Annealing carry: everything a resumed run needs."""
+
+    genome: jnp.ndarray       # (N, 2) int32 levels
+    cur_fit: jnp.ndarray      # () f32 current point's objective-or-inf
+    best_fit: jnp.ndarray     # () f32 best seen
+    best_genome: jnp.ndarray  # (N, 2) int32
+    temp: jnp.ndarray         # () f32 annealing temperature
+    key: jnp.ndarray
+    step: jnp.ndarray         # () int32 annealing steps completed
+
+
+class SAEngine(NamedTuple):
+    """One annealing step split at the cost evaluation.
+
+    ``step_fn(state, _)`` is the in-graph scan body; it composes
+    ``propose`` -> evaluate-candidate -> ``accept``.  The split lets a
+    host-side ``eval_fn`` (the search service's cross-request batcher) own
+    the candidate evaluation while ``propose``/``accept`` stay the same
+    compiled programs, so batched runs are byte-identical to in-graph ones.
+    """
+
+    init_genome: Callable     # seed -> (genome, key)
+    propose: Callable         # SAState -> (cand, accept_key, next_key)
+    accept: Callable          # (SAState, cand, cand_fit, k4, key) ->
+    #                           (SAState, best_fit)
+    step_fn: Callable         # (SAState, _) -> (SAState, best_fit)
+    eval_one: Callable        # (N, 2) genome -> () fitness
+
+
+def make_sa_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+                   cfg: SAConfig) -> SAEngine:
     N = env.num_layers
     L = ecfg.levels
 
@@ -133,41 +163,135 @@ def simulated_annealing(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
         fit, pe, kt = _decode_and_eval(env, ecfg, genome[None])
         return fit[0]
 
-    def step_fn(carry, _):
-        genome, cur_fit, best_fit, best_genome, T, key = carry
-        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+    def propose(state: SAState):
+        key, k1, k2, k3, k4 = jax.random.split(state.key, 5)
         i = jax.random.randint(k1, (), 0, N)
         j = jax.random.randint(k2, (), 0, 2)
         delta = jnp.where(jax.random.uniform(k3) < 0.5, -cfg.step, cfg.step)
-        cand = genome.at[i, j].set(jnp.clip(genome[i, j] + delta, 0, L - 1))
-        cand_fit = eval_one(cand)
+        cand = state.genome.at[i, j].set(
+            jnp.clip(state.genome[i, j] + delta, 0, L - 1))
+        return cand, k4, key
+
+    def accept(state: SAState, cand, cand_fit, k4, key):
         # Metropolis on finite fitness; +inf candidates only accepted if the
         # current point is also infeasible (pure exploration).
-        d = cand_fit - cur_fit
+        d = cand_fit - state.cur_fit
         accept_prob = jnp.where(d <= 0, 1.0, jnp.exp(-jnp.minimum(
-            d / jnp.maximum(cur_fit, 1.0) * 100.0 / T, 50.0)))
+            d / jnp.maximum(state.cur_fit, 1.0) * 100.0 / state.temp, 50.0)))
         accept_prob = jnp.where(jnp.isnan(accept_prob),
-                                jnp.where(jnp.isinf(cur_fit), 1.0, 0.0),
+                                jnp.where(jnp.isinf(state.cur_fit), 1.0, 0.0),
                                 accept_prob)
         take = jax.random.uniform(k4) < accept_prob
-        genome = jnp.where(take, cand, genome)
-        cur_fit = jnp.where(take, cand_fit, cur_fit)
-        better = cand_fit < best_fit
-        best_fit = jnp.where(better, cand_fit, best_fit)
-        best_genome = jnp.where(better, cand, best_genome)
-        return (genome, cur_fit, best_fit, best_genome, T * cfg.decay,
-                key), best_fit
+        genome = jnp.where(take, cand, state.genome)
+        cur_fit = jnp.where(take, cand_fit, state.cur_fit)
+        better = cand_fit < state.best_fit
+        best_fit = jnp.where(better, cand_fit, state.best_fit)
+        best_genome = jnp.where(better, cand, state.best_genome)
+        return SAState(genome, cur_fit, best_fit, best_genome,
+                       state.temp * cfg.decay, key,
+                       state.step + 1), best_fit
 
-    key = jax.random.PRNGKey(cfg.seed)
-    key, k0 = jax.random.split(key)
-    genome = jax.random.randint(k0, (N, 2), 0, L)
-    cur = eval_one(genome)
-    init = (genome, cur, cur, genome, jnp.float32(cfg.temperature), key)
-    (g, _, best_fit, best_genome, _, _), hist = jax.jit(
-        lambda c: jax.lax.scan(step_fn, c, None, length=eps))(init)
-    pe = np.asarray(env.pe_table)[np.asarray(best_genome[:, 0])]
-    kt = np.asarray(env.kt_table)[np.asarray(best_genome[:, 1])]
-    return BaselineResult(float(best_fit), pe, kt, np.asarray(hist), eps)
+    def step_fn(carry: SAState, _):
+        cand, k4, key = propose(carry)
+        return accept(carry, cand, eval_one(cand), k4, key)
+
+    def init_genome(seed):
+        key = jax.random.PRNGKey(seed)
+        key, k0 = jax.random.split(key)
+        return jax.random.randint(k0, (N, 2), 0, L), key
+
+    return SAEngine(init_genome, propose, accept, step_fn, eval_one)
+
+
+def run_sa_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
+                  cfg: SAConfig = SAConfig(),
+                  state: Optional[SAState] = None,
+                  chunk: Optional[int] = None,
+                  on_chunk=None,
+                  eval_fn=None,
+                  env: Optional[env_lib.EnvArrays] = None):
+    """Chunked, resumable simulated annealing.  Returns (SAState, history).
+
+    Runs ``eps`` *more* annealing steps from ``state`` (fresh run when
+    None) in chunks of ``chunk`` steps (default: one chunk).
+    ``on_chunk(state, chunk_hist, steps_done)`` fires between chunks -- the
+    unified API streams progress and observes cancellation there, exactly
+    like ``reinforce.run_search``.  ``eval_fn(pe, kt, df) -> (1,) fitness``
+    moves candidate evaluation to the host (the search service injects its
+    cross-request batcher); results are byte-identical either way, and
+    chunk boundaries never change the result.
+    """
+    if env is None:
+        env = env_lib.make_env(workload, ecfg)
+    engine = make_sa_engine(env, ecfg, cfg)
+    pe_table = np.asarray(env.pe_table, np.float32)
+    kt_table = np.asarray(env.kt_table, np.float32)
+
+    def host_eval(genome_np):
+        pe = pe_table[genome_np[:, 0]][None]
+        kt = kt_table[genome_np[:, 1]][None]
+        fit = np.asarray(eval_fn(pe, kt, np.float32(ecfg.dataflow)),
+                         np.float32)
+        return jnp.float32(fit[0])
+
+    if state is None:
+        genome, key = engine.init_genome(cfg.seed)
+        cur = (host_eval(np.asarray(genome)) if eval_fn is not None
+               else jax.jit(engine.eval_one)(genome))
+        state = SAState(genome, cur, cur, genome,
+                        jnp.float32(cfg.temperature), key,
+                        jnp.zeros((), jnp.int32))
+
+    chunk = eps if not chunk else max(int(chunk), 1)
+    hist = []
+    done = 0
+    if eval_fn is None:
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def run_chunk(state, n):
+            return jax.lax.scan(engine.step_fn, state, None, length=n)
+
+        while done < eps:
+            n = min(chunk, eps - done)
+            state, h = run_chunk(state, n)
+            h = np.asarray(h)
+            hist.append(h)
+            done += n
+            if on_chunk is not None:
+                on_chunk(state, h, done)
+    else:
+        propose = jax.jit(engine.propose)
+        accept = jax.jit(engine.accept)
+        while done < eps:
+            n = min(chunk, eps - done)
+            h = np.empty((n,), np.float32)
+            for s in range(n):
+                cand, k4, key = propose(state)
+                cand_fit = host_eval(np.asarray(cand))
+                state, bf = accept(state, cand, cand_fit, k4, key)
+                h[s] = np.float32(bf)
+            hist.append(h)
+            done += n
+            if on_chunk is not None:
+                on_chunk(state, h, done)
+    return state, (np.concatenate(hist) if hist
+                   else np.empty((0,), np.float32))
+
+
+def sa_solution(env: env_lib.EnvArrays, state: SAState):
+    """Decode an SA state's best genome to raw (pe, kt) arrays."""
+    pe = np.asarray(env.pe_table)[np.asarray(state.best_genome[:, 0])]
+    kt = np.asarray(env.kt_table)[np.asarray(state.best_genome[:, 1])]
+    return pe, kt
+
+
+def simulated_annealing(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
+                        cfg: SAConfig = SAConfig(),
+                        eval_fn=None) -> BaselineResult:
+    env = env_lib.make_env(workload, ecfg)
+    state, hist = run_sa_search(workload, ecfg, eps, cfg, eval_fn=eval_fn,
+                                env=env)
+    pe, kt = sa_solution(env, state)
+    return BaselineResult(float(state.best_fit), pe, kt, hist, eps)
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +314,7 @@ def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
     L = ecfg.levels
     eval_b = _eval_batch_fn(env, ecfg, eval_fn)
 
-    X = rng.integers(0, L, size=(init_random, N, 2)).astype(np.int32)
+    X = rng.integers(0, L, size=(min(init_random, eps), N, 2)).astype(np.int32)
     fit, pe_all, kt_all = eval_b(jnp.asarray(X))
     y = np.asarray(fit, dtype=np.float64)
     hist = list(np.minimum.accumulate(np.where(np.isinf(y), np.inf, y)))
@@ -225,7 +349,11 @@ def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
             pb[None], cand.transpose(0, 1, 2)[..., None], axis=-1)
         score = np.log(li + 1e-12).sum((1, 2, 3)) - np.log(
             gi + 1e-12).sum((1, 2, 3))
-        pick = cand[np.argsort(-score)[:batch]]
+        # Clamp the final batch to the remaining budget: the best must be
+        # found within eps samples (the conformance suite asserts the trace
+        # ends at best_value; an over-budget improvement would be invisible
+        # in the eps-length history yet reported as the result).
+        pick = cand[np.argsort(-score)[:min(batch, eps - len(y))]]
         fit, _, _ = eval_b(jnp.asarray(pick))
         fit = np.asarray(fit, dtype=np.float64)
         X = np.concatenate([X, pick], axis=0)

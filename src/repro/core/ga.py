@@ -14,15 +14,27 @@ stage-1 solution with the paper's conservative operators:
 
 Fitness = whole-model objective, +inf when the platform constraint is
 violated.  Fully vectorized: one generation = one batched cost-model call.
+
+Both GAs are **chunked, resumable engines** with the same lifecycle as
+``reinforce.run_search``/``rl_baselines.run_ac_search``: the generation scan
+runs in fixed-size chunks, ``on_chunk(state, chunk_hist, gens_done)`` fires
+between chunks (the unified API streams progress and observes cancellation
+there), and the returned :class:`GAState` feeds back in via ``state=`` to
+continue a run bit-identically.  Each engine splits one generation into a
+*fitness* half and an *evolve* half so a host-side ``eval_fn`` (the search
+service's cross-request :class:`~repro.serving.batcher.CostEvalBatcher`) can
+own the fitness evaluation; the fitness values are bit-identical whichever
+path computes them, so batched outcomes equal in-graph ones byte for byte.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import env as env_lib
 from repro.costmodel import dataflows as dfl
@@ -48,6 +60,32 @@ class LocalGAConfig:
     crossover_rate: float = 0.2
     mutation_step: int = 4       # raw-space +-step (PE); kt uses step 1
     seed: int = 0
+
+
+class GAState(NamedTuple):
+    """Scan carry of either GA: everything a resumed run needs."""
+
+    pop: jnp.ndarray             # (P, N, genes) int32
+    best_val: jnp.ndarray        # () f32 best feasible objective so far
+    best_genome: jnp.ndarray     # (N, genes) int32
+    key: jnp.ndarray
+    generation: jnp.ndarray      # () int32 generations completed
+
+
+class GAEngine(NamedTuple):
+    """Building blocks of one GA run.
+
+    ``gen_step(state, _) == evolve(state, fitness(state.pop))`` -- the scan
+    body of the in-graph path.  The split exists so a host-side ``eval_fn``
+    can own the fitness half (search-service batching) while ``evolve``
+    stays the one compiled selection/breeding program either way.
+    """
+
+    init_carry: Callable         # seed -> GAState
+    gen_step: Callable           # (GAState, _) -> (GAState, best_val)
+    decode: Callable             # genome levels -> (pe, kt, df) raw
+    fitness: Callable            # pop -> (P,) objective-or-inf
+    evolve: Callable             # (GAState, fit) -> (GAState, best_val)
 
 
 class GAResult(NamedTuple):
@@ -76,13 +114,13 @@ def _fitness(env, ecfg, pe, kt, df, use_kernel: bool = False):
 # Baseline GA (coarse level space).
 # ---------------------------------------------------------------------------
 def make_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
-                   cfg: GAConfig):
-    """(init_carry, gen_step, decode) building blocks of the baseline GA.
+                   cfg: GAConfig) -> GAEngine:
+    """The baseline GA's :class:`GAEngine` for one environment.
 
     ``init_carry(seed)`` builds the scan carry for one independent GA run;
     ``gen_step`` is seed-free, so the fanout device backend can shard_map one
     compiled generation scan across devices whose carries differ only in
-    their seed.  ``baseline_ga`` below is the single-run composition.
+    their seed.  ``run_ga_search`` below is the chunked single-run driver.
     """
     N = env.num_layers
     P = cfg.population
@@ -99,10 +137,12 @@ def make_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
               else jnp.asarray(ecfg.dataflow, jnp.int32))
         return pe, kt, df
 
-    def gen_step(carry, _):
-        pop, best_val, best_genome, key = carry
+    def fitness(pop):
         pe, kt, df = decode(pop)
-        fit = _fitness(env, ecfg, pe, kt, df, use_kernel)   # (P,)
+        return _fitness(env, ecfg, pe, kt, df, use_kernel)   # (P,)
+
+    def evolve(state: GAState, fit):
+        pop, best_val, best_genome, key, gen = state
         order = jnp.argsort(fit)
         pop = pop[order]
         fit = fit[order]
@@ -127,44 +167,145 @@ def make_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
                                    children.shape[:-1], 0, n_df))
         children = jnp.where(mut_mask, rand, children)
         pop = jnp.concatenate([pop[:half], children], axis=0)
-        return (pop, best_val, best_genome, key), best_val
+        return GAState(pop, best_val, best_genome, key, gen + 1), best_val
 
-    def init_carry(seed):
+    def gen_step(carry: GAState, _):
+        return evolve(carry, fitness(carry.pop))
+
+    def init_carry(seed) -> GAState:
         key = jax.random.PRNGKey(seed)
         key, k0 = jax.random.split(key)
         pop = jax.random.randint(k0, (P, N, genes), 0, L)
         if ecfg.mix:
             pop = pop.at[..., 2].set(
                 jax.random.randint(jax.random.fold_in(k0, 7), (P, N), 0, 3))
-        return (pop, jnp.float32(jnp.inf),
-                jnp.zeros((N, genes), jnp.int32), key)
+        return GAState(pop, jnp.float32(jnp.inf),
+                       jnp.zeros((N, genes), jnp.int32), key,
+                       jnp.zeros((), jnp.int32))
 
-    return init_carry, gen_step, decode
+    return GAEngine(init_carry, gen_step, decode, fitness, evolve)
+
+
+def _run_chunked_ga(env, ecfg, engine: GAEngine, state: GAState,
+                    generations: int, chunk: Optional[int], on_chunk,
+                    eval_fn, mix_df: bool, raw_genome: bool = False,
+                    fixed_df=None):
+    """Shared chunk driver for both GAs.  Returns (state, (gens,) history).
+
+    ``eval_fn=None`` scans ``gen_step`` in jitted chunks (fitness stays in
+    the XLA program); with ``eval_fn(pe, kt, df) -> (P,) fitness`` each
+    generation decodes on the host, evaluates through the injected function
+    (the service's cross-request batcher) and applies the same compiled
+    ``evolve`` step.  Both paths produce byte-identical states/histories:
+    the decode is the same table gather, the fitness values are bit-equal
+    (asserted in tests/test_search_service.py), and every other op is the
+    identical jnp program.
+    """
+    chunk = generations if not chunk else max(int(chunk), 1)
+    hist = []
+    done = 0
+    if eval_fn is None:
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def run_chunk(state, n):
+            return jax.lax.scan(engine.gen_step, state, None, length=n)
+
+        while done < generations:
+            n = min(chunk, generations - done)
+            state, h = run_chunk(state, n)
+            h = np.asarray(h)
+            hist.append(h)
+            done += n
+            if on_chunk is not None:
+                on_chunk(state, h, done)
+        return state, (np.concatenate(hist) if hist
+                       else np.empty((0,), np.float32))
+
+    evolve = jax.jit(engine.evolve)
+    pe_table = np.asarray(env.pe_table, np.float32)
+    kt_table = np.asarray(env.kt_table, np.float32)
+    while done < generations:
+        n = min(chunk, generations - done)
+        h = np.empty((n,), np.float32)
+        for g in range(n):
+            pop = np.asarray(state.pop)
+            if raw_genome:
+                pe = pop[..., 0].astype(np.float32)
+                kt = pop[..., 1].astype(np.float32)
+            else:
+                pe = pe_table[pop[..., 0]]
+                kt = kt_table[pop[..., 1]]
+            if fixed_df is not None:
+                df = fixed_df
+            elif mix_df:
+                df = pop[..., 2].astype(np.float32)
+            else:
+                df = np.float32(ecfg.dataflow)
+            fit = np.asarray(eval_fn(pe, kt, df), np.float32)
+            state, bv = evolve(state, jnp.asarray(fit))
+            h[g] = np.float32(bv)
+        hist.append(h)
+        done += n
+        if on_chunk is not None:
+            on_chunk(state, h, done)
+    return state, (np.concatenate(hist) if hist
+                   else np.empty((0,), np.float32))
+
+
+def run_ga_search(workload, ecfg: env_lib.EnvConfig,
+                  cfg: GAConfig = GAConfig(),
+                  state: Optional[GAState] = None,
+                  chunk: Optional[int] = None,
+                  on_chunk=None,
+                  eval_fn=None,
+                  env: Optional[env_lib.EnvArrays] = None):
+    """Chunked, resumable baseline GA.  Returns (GAState, (gens,) history).
+
+    Runs ``cfg.generations`` *more* generations from ``state`` (fresh run
+    when None), in chunks of ``chunk`` generations (default: one chunk).
+    ``on_chunk(state, chunk_hist, gens_done)`` fires between chunks -- the
+    unified API streams progress and observes cancellation there, exactly
+    like ``reinforce.run_search``.  ``eval_fn(pe, kt, df) -> (P,) fitness``
+    moves the per-generation fitness evaluation to the host (the search
+    service injects its cross-request batcher); results are byte-identical
+    either way.  Chunk boundaries never change the result.
+    """
+    if env is None:
+        env = env_lib.make_env(workload, ecfg)
+    engine = make_ga_engine(env, ecfg, cfg)
+    if state is None:
+        state = engine.init_carry(cfg.seed)
+    return _run_chunked_ga(env, ecfg, engine, state, cfg.generations,
+                           chunk, on_chunk, eval_fn, mix_df=ecfg.mix)
+
+
+def ga_solution(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+                state: GAState):
+    """Decode a baseline-GA state's best genome to raw (pe, kt, df)."""
+    pe = env.pe_table[state.best_genome[..., 0]]
+    kt = env.kt_table[state.best_genome[..., 1]]
+    df = (state.best_genome[..., 2] if ecfg.mix
+          else jnp.asarray(ecfg.dataflow, jnp.int32))
+    return pe, kt, jnp.broadcast_to(df, (env.num_layers,))
 
 
 def baseline_ga(workload, ecfg: env_lib.EnvConfig,
                 cfg: GAConfig = GAConfig()) -> GAResult:
     env = env_lib.make_env(workload, ecfg)
-    N = env.num_layers
-    init_carry, gen_step, decode = make_ga_engine(env, ecfg, cfg)
-    (pop, best_val, best_genome, _), hist = jax.lax.scan(
-        gen_step, init_carry(cfg.seed), None, length=cfg.generations)
-    pe, kt, df = decode(best_genome)
-    df = jnp.broadcast_to(df, (N,))
-    return GAResult(best_val, pe, kt, df, hist,
+    state, hist = run_ga_search(workload, ecfg, cfg, env=env)
+    pe, kt, df = ga_solution(env, ecfg, state)
+    return GAResult(state.best_val, pe, kt, df, hist,
                     cfg.population * cfg.generations)
 
 
 # ---------------------------------------------------------------------------
 # Stage-2 local GA (fine-grained raw space, seeded by the RL solution).
 # ---------------------------------------------------------------------------
-def local_ga(workload, ecfg: env_lib.EnvConfig,
-             init_pe, init_kt, init_df,
-             cfg: LocalGAConfig = LocalGAConfig()) -> GAResult:
-    env = env_lib.make_env(workload, ecfg)
+def make_local_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+                         init_pe, init_kt, init_df,
+                         cfg: LocalGAConfig) -> GAEngine:
+    """The fine-tuner's :class:`GAEngine`: raw-space genomes, fixed df."""
     N = env.num_layers
     P = cfg.population
-    key = jax.random.PRNGKey(cfg.seed)
 
     init_genome = jnp.stack(
         [jnp.asarray(init_pe, jnp.int32), jnp.asarray(init_kt, jnp.int32)],
@@ -194,11 +335,16 @@ def local_ga(workload, ecfg: env_lib.EnvConfig,
         swapped = genome.at[i].set(gj).at[j].set(gi)
         return jnp.where(do, swapped, genome)
 
-    def gen_step(carry, _):
-        pop, best_val, best_genome, key = carry
-        pe = pop[..., 0].astype(jnp.float32)
-        kt = pop[..., 1].astype(jnp.float32)
-        fit = _fitness(env, ecfg, pe, kt, df)
+    def decode(genome):
+        return (genome[..., 0].astype(jnp.float32),
+                genome[..., 1].astype(jnp.float32), df)
+
+    def fitness(pop):
+        pe, kt, _ = decode(pop)
+        return _fitness(env, ecfg, pe, kt, df)
+
+    def evolve(state: GAState, fit):
+        pop, best_val, best_genome, key, gen = state
         order = jnp.argsort(fit)
         pop, fit = pop[order], fit[order]
         better = fit[0] < best_val
@@ -211,14 +357,49 @@ def local_ga(workload, ecfg: env_lib.EnvConfig,
             parents, jax.random.split(k2, P - half))
         children = jax.vmap(mutate)(children, jax.random.split(k3, P - half))
         pop = jnp.concatenate([pop[:half], children], axis=0)
-        return (pop, best_val, best_genome, key), best_val
+        return GAState(pop, best_val, best_genome, key, gen + 1), best_val
 
-    pop = jnp.broadcast_to(init_genome, (P, N, 2)).astype(jnp.int32)
-    init = (pop, jnp.inf, init_genome, key)
-    run = functools.partial(jax.lax.scan, gen_step, length=cfg.generations)
-    (_, best_val, best_genome, _), hist = jax.jit(
-        lambda init: run(init, None))(init)
-    return GAResult(best_val,
-                    best_genome[..., 0].astype(jnp.float32),
-                    best_genome[..., 1].astype(jnp.float32),
+    def gen_step(carry: GAState, _):
+        return evolve(carry, fitness(carry.pop))
+
+    def init_carry(seed) -> GAState:
+        pop = jnp.broadcast_to(init_genome, (P, N, 2)).astype(jnp.int32)
+        return GAState(pop, jnp.float32(jnp.inf), init_genome,
+                       jax.random.PRNGKey(seed), jnp.zeros((), jnp.int32))
+
+    return GAEngine(init_carry, gen_step, decode, fitness, evolve)
+
+
+def run_local_ga(workload, ecfg: env_lib.EnvConfig,
+                 init_pe, init_kt, init_df,
+                 cfg: LocalGAConfig = LocalGAConfig(),
+                 state: Optional[GAState] = None,
+                 chunk: Optional[int] = None,
+                 on_chunk=None,
+                 eval_fn=None,
+                 env: Optional[env_lib.EnvArrays] = None):
+    """Chunked, resumable stage-2 fine-tune; same contract as run_ga_search.
+
+    The dataflow assignment is frozen at ``init_df`` (stage 2 fine-tunes
+    only the budget split), so ``eval_fn`` always receives that fixed array.
+    """
+    if env is None:
+        env = env_lib.make_env(workload, ecfg)
+    engine = make_local_ga_engine(env, ecfg, init_pe, init_kt, init_df, cfg)
+    if state is None:
+        state = engine.init_carry(cfg.seed)
+    fixed_df = np.asarray(init_df, np.float32) if eval_fn is not None else None
+    return _run_chunked_ga(env, ecfg, engine, state, cfg.generations,
+                           chunk, on_chunk, eval_fn, mix_df=False,
+                           raw_genome=True, fixed_df=fixed_df)
+
+
+def local_ga(workload, ecfg: env_lib.EnvConfig,
+             init_pe, init_kt, init_df,
+             cfg: LocalGAConfig = LocalGAConfig()) -> GAResult:
+    state, hist = run_local_ga(workload, ecfg, init_pe, init_kt, init_df, cfg)
+    df = jnp.asarray(init_df, jnp.int32)
+    return GAResult(state.best_val,
+                    state.best_genome[..., 0].astype(jnp.float32),
+                    state.best_genome[..., 1].astype(jnp.float32),
                     df, hist, cfg.population * cfg.generations)

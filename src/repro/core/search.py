@@ -43,11 +43,16 @@ def confuciux_search(workload, ecfg: env_lib.EnvConfig,
                      pcfg: policy_lib.PolicyConfig = None,
                      fine_tune: bool = True,
                      chunk: int = 500,
-                     on_chunk=None) -> SearchResult:
+                     on_chunk=None,
+                     ga_chunk: Optional[int] = None,
+                     ga_on_chunk=None) -> SearchResult:
     """Run the full two-stage ConfuciuX pipeline on a workload.
 
     chunk / on_chunk are forwarded to the stage-1 ``reinforce.run_search``
-    so callers (the unified API) can stream global-search progress live.
+    so callers (the unified API) can stream global-search progress live;
+    ga_chunk / ga_on_chunk do the same for the stage-2 local-GA fine-tune
+    (``ga_lib.run_local_ga``), which makes stage 2 preemptible at chunk
+    granularity too instead of one opaque scan.
     """
     if isinstance(workload, str):
         workload = workloads_lib.get_workload(workload)
@@ -64,16 +69,18 @@ def confuciux_search(workload, ecfg: env_lib.EnvConfig,
     initial_valid = float(finite[0]) if len(finite) else float("inf")
 
     if fine_tune and np.isfinite(stage1):
-        ga_res = ga_lib.local_ga(workload, ecfg, pe1, kt1, df1, gcfg)
-        if float(ga_res.best_value) < stage1:
-            pe, kt, df = (np.asarray(ga_res.best_pe),
-                          np.asarray(ga_res.best_kt),
-                          np.asarray(ga_res.best_df))
-            best = float(ga_res.best_value)
+        ga_state, ga_hist = ga_lib.run_local_ga(
+            workload, ecfg, pe1, kt1, df1, gcfg, chunk=ga_chunk,
+            on_chunk=ga_on_chunk, env=env)
+        if float(ga_state.best_val) < stage1:
+            pe = np.asarray(ga_state.best_genome[..., 0], np.float32)
+            kt = np.asarray(ga_state.best_genome[..., 1], np.float32)
+            df = np.asarray(df1)
+            best = float(ga_state.best_val)
         else:  # GA never improves past the seed by construction, but guard.
             pe, kt, df, best = (np.asarray(pe1), np.asarray(kt1),
                                 np.asarray(df1), stage1)
-        ga_hist = np.asarray(ga_res.history)
+        ga_hist = np.asarray(ga_hist)
     else:
         pe, kt, df, best = (np.asarray(pe1), np.asarray(kt1),
                             np.asarray(df1), stage1)

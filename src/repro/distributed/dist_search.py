@@ -380,8 +380,8 @@ def _fanout_ga_device(subs) -> list:
     env = env_lib.make_env(wl, ecfg)
     cfg = api_optimizers._ga_cfg(req0)
     pop, gens = cfg.population, cfg.generations
-    init_carry, gen_step, decode = ga_lib.make_ga_engine(env, ecfg, cfg)
-    stacked = _stack_trees([init_carry(sub.seed) for sub in subs])
+    engine = ga_lib.make_ga_engine(env, ecfg, cfg)
+    stacked = _stack_trees([engine.init_carry(sub.seed) for sub in subs])
     mesh = _shard_mesh(n_shards)
     P_s = P("shard")
 
@@ -389,20 +389,22 @@ def _fanout_ga_device(subs) -> list:
     def run_all(stacked):
         def body(carry):
             carry = jax.tree.map(lambda x: jnp.squeeze(x, 0), carry)
-            carry2, hist = jax.lax.scan(gen_step, carry, None, length=gens)
+            carry2, hist = jax.lax.scan(engine.gen_step, carry, None,
+                                        length=gens)
             return jax.tree.map(lambda x: x[None], carry2), hist[None]
 
         return shard_map(body, mesh=mesh, in_specs=(P_s,),
                          out_specs=(P_s, P_s), check_rep=False)(stacked)
 
     t0 = time.time()
-    (_, best_vals, best_genomes, _), hist = run_all(stacked)
-    best_vals = np.asarray(best_vals)
+    final, hist = run_all(stacked)
+    best_vals = np.asarray(final.best_val)
+    best_genomes = final.best_genome
     hist = np.asarray(hist)
 
     outcomes = []
     for s, sub in enumerate(subs):
-        pe, kt, df = decode(best_genomes[s])
+        pe, kt, df = engine.decode(best_genomes[s])
         df = jnp.broadcast_to(df, (env.num_layers,))
         trace = api_types.expand_trace(hist[s], pop)
         outcomes.append(api_types.build_outcome(

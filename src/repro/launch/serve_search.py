@@ -12,9 +12,13 @@
 Every request is a unified-API ``SearchRequest`` dispatched through
 :class:`repro.serving.SearchService`: host-loop methods (random/grid/bo)
 fuse their cost evaluations into one cross-request dispatch stream with a
-shared per-point memo cache; chunked engines (reinforce, two_stage, a2c,
-ppo2) interleave at chunk granularity.  The exit summary reports
-searches/sec, the cache hit rate and the batcher fusion stats.
+shared per-point memo cache; ga/sa are chunked engines whose generation /
+candidate evaluations route through the SAME batcher; the RL family
+(reinforce, two_stage, a2c, ppo2) interleaves at chunk granularity.
+``--dispatch-workers N`` sizes the batcher's fused-dispatch pool (N
+concurrent fused dispatches, still bit-identical to serial).  The exit
+summary reports searches/sec, the cache hit rate and the batcher fusion
+stats.
 """
 from __future__ import annotations
 
@@ -83,6 +87,8 @@ def main(argv=None):
     ap.add_argument("--platform", default="cloud",
                     choices=["unlimited", "cloud", "iot", "iotx"])
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--dispatch-workers", type=int, default=1,
+                    help="fused-dispatch pool size in the cost-eval batcher")
     ap.add_argument("--window-ms", type=float, default=2.0)
     ap.add_argument("--progress", action="store_true",
                     help="stream per-request progress lines")
@@ -97,9 +103,11 @@ def main(argv=None):
     requests = [_to_request(s, args) for s in specs]
 
     print(f"serving {len(requests)} searches on {args.workers} workers "
-          f"(window {args.window_ms}ms)", flush=True)
+          f"({args.dispatch_workers} dispatch, window {args.window_ms}ms)",
+          flush=True)
     svc = SearchService(ServiceConfig(max_workers=args.workers,
-                                      window_ms=args.window_ms))
+                                      window_ms=args.window_ms,
+                                      dispatch_workers=args.dispatch_workers))
     t0 = time.time()
     tickets = []
     for i, r in enumerate(requests):

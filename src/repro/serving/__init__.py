@@ -3,6 +3,7 @@ from repro.serving.cost_cache import CostMemoCache  # noqa: F401
 from repro.serving.engine import Engine, Request, ServeConfig  # noqa: F401
 from repro.serving.search_service import (  # noqa: F401
     BATCHED_METHODS,
+    RAW_BATCHED_METHODS,
     SearchCancelled,
     SearchService,
     SearchTicket,

@@ -104,11 +104,20 @@ class CostEvalBatcher:
     searches.  ``use_kernel=None`` auto-selects the Pallas per-row-layers
     kernel on TPU and the jitted jnp oracle elsewhere (interpret-mode Pallas
     would dominate CPU runs).
+
+    ``dispatch_workers`` sizes the dispatch pool: with N > 1, up to N fused
+    dispatches execute concurrently (XLA releases the GIL during execution,
+    and the host-side flatten/unique/reassemble work overlaps too).  Fusion
+    grouping never changes values -- the cost model is elementwise per point
+    and each item aggregates only its own points -- so pooled dispatch stays
+    bit-identical to the single-thread dispatcher, cache races included
+    (two workers evaluating the same point store the same bytes).
     """
 
     def __init__(self, cache: Optional[CostMemoCache] = None,
                  window_ms: float = 2.0,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 dispatch_workers: int = 1):
         self.cache = cache if cache is not None else CostMemoCache()
         self._window_s = max(window_ms, 0.0) / 1e3
         self._use_kernel = (use_kernel if use_kernel is not None
@@ -117,14 +126,20 @@ class CostEvalBatcher:
         self._cv = threading.Condition()
         self._closed = False
         self._stats_lock = threading.Lock()
+        self._active = 0
         self._stats = {
             "dispatches": 0, "fused_dispatches": 0, "items": 0,
             "points": 0, "unique_points": 0, "fresh_points": 0,
             "max_items_per_dispatch": 0, "max_points_per_dispatch": 0,
+            "dispatch_workers": max(int(dispatch_workers), 1),
+            "max_concurrent_dispatches": 0,
         }
-        self._thread = threading.Thread(
-            target=self._loop, name="cost-eval-batcher", daemon=True)
-        self._thread.start()
+        self._threads = [
+            threading.Thread(target=self._loop,
+                             name=f"cost-eval-batcher-{i}", daemon=True)
+            for i in range(max(int(dispatch_workers), 1))]
+        for t in self._threads:
+            t.start()
 
     # -- client side --------------------------------------------------------
     def evaluate(self, layers, pe, kt, df, ecfg, budget) -> np.ndarray:
@@ -169,7 +184,8 @@ class CostEvalBatcher:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-        self._thread.join(timeout=5.0)
+        for t in self._threads:
+            t.join(timeout=5.0)
 
     # -- dispatcher side ----------------------------------------------------
     def _loop(self) -> None:
@@ -185,6 +201,10 @@ class CostEvalBatcher:
                 items, self._pending = self._pending, []
             if not items:
                 continue
+            with self._stats_lock:
+                self._active += 1
+                self._stats["max_concurrent_dispatches"] = max(
+                    self._stats["max_concurrent_dispatches"], self._active)
             try:
                 self._dispatch(items)
             except BaseException as e:  # noqa: BLE001 -- never stall waiters
@@ -192,6 +212,9 @@ class CostEvalBatcher:
                     if not it.event.is_set():
                         it.error = e
                         it.event.set()
+            finally:
+                with self._stats_lock:
+                    self._active -= 1
 
     def _dispatch(self, items: List[_Item]) -> None:
         rows = (items[0].points if len(items) == 1

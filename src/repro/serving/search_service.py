@@ -9,14 +9,22 @@ and multiplexes them onto shared hardware:
     evaluations through one shared :class:`CostEvalBatcher`, so N users'
     searches produce one fused dispatch stream and share the per-point
     :class:`CostMemoCache` (popular workloads re-evaluate almost nothing);
+  * ``ga`` and ``sa`` run as chunked engines whose per-generation /
+    per-candidate fitness goes through the SAME batcher via a raw-array
+    ``eval_fn`` -- GA populations are the largest eval batches in the
+    system, so a whole generation fuses with concurrent traffic and hits
+    the memo cache;
   * the chunked JAX engines (``reinforce``, ``two_stage``, ``a2c``, ``ppo2``,
     ``fanout``) interleave at chunk granularity -- XLA releases the GIL
     during compile and execute -- and stream per-request progress through
     the service's wrapper, which doubles as the cancellation point;
+  * the batcher's fused dispatch runs on a small pool
+    (``ServiceConfig.dispatch_workers``): up to N fused dispatches execute
+    concurrently, still bit-identical to single-thread dispatch;
   * ``ticket.cancel()`` stops a search at its next progress chunk (chunked
-    engines) or next evaluation batch (batched methods); a cancelled request
-    never stalls the batcher -- its in-flight points are simply computed and
-    dropped.
+    engines) or next evaluation batch (batched methods, including every
+    GA generation and SA step); a cancelled request never stalls the
+    batcher -- its in-flight points are simply computed and dropped.
 
 Typical use::
 
@@ -53,11 +61,17 @@ class SearchCancelled(Exception):
     """Raised inside a worker when its ticket was cancelled mid-search."""
 
 
-# Methods whose host-side eval loop accepts an injected ``eval_fn`` and can
-# therefore be fused by the cross-request batcher.  The RL family and GA keep
-# their env-in-the-graph engines (the whole search is one XLA program) and
-# multiplex at chunk granularity instead.
+# Methods whose host-side eval loop accepts an injected genome-level
+# ``eval_fn`` and can therefore be fused by the cross-request batcher.
 BATCHED_METHODS = ("random", "grid", "bo")
+
+# Chunked engines whose ``eval_fn`` takes already-decoded raw ``(pe, kt,
+# df)`` arrays instead of level genomes: GA populations and SA candidates
+# route through the same batcher (fusion + dedup + memo cache) via
+# :meth:`SearchService._make_raw_eval_fn`.  The RL family keeps its
+# env-in-the-graph engines (the whole search is one XLA program) and
+# multiplexes at chunk granularity only.
+RAW_BATCHED_METHODS = ("ga", "sa")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +81,8 @@ class ServiceConfig:
     window_ms: float = 2.0        # batcher accumulation window
     use_kernel: Optional[bool] = None   # None: Pallas kernel on TPU only
     batched_methods: Tuple[str, ...] = BATCHED_METHODS
+    raw_batched_methods: Tuple[str, ...] = RAW_BATCHED_METHODS
+    dispatch_workers: int = 1     # fused-dispatch pool size (batcher threads)
     default_progress_every: int = 200   # service-side chunking when the
     #                                     request carries no callback
 
@@ -123,7 +139,8 @@ class SearchService:
         self.cfg = cfg
         self.cache = CostMemoCache(cfg.cache_entries)
         self.batcher = CostEvalBatcher(self.cache, window_ms=cfg.window_ms,
-                                       use_kernel=cfg.use_kernel)
+                                       use_kernel=cfg.use_kernel,
+                                       dispatch_workers=cfg.dispatch_workers)
         self._pool = ThreadPoolExecutor(
             max_workers=cfg.max_workers, thread_name_prefix="search-worker")
         self._uids = itertools.count()
@@ -208,6 +225,8 @@ class SearchService:
         method = api_registry.get_optimizer(request.method).name
         if method in self.cfg.batched_methods:
             options["eval_fn"] = self._make_eval_fn(ticket)
+        elif method in self.cfg.raw_batched_methods:
+            options["eval_fn"] = self._make_raw_eval_fn(ticket)
         return dataclasses.replace(
             request, options=options, on_progress=on_progress,
             progress_every=progress_every)
@@ -230,6 +249,29 @@ class SearchService:
             fit = batcher.evaluate(layers, pe, kt,
                                    np.float32(ecfg.dataflow), ecfg, budget)
             return fit, pe, kt
+
+        return eval_fn
+
+    def _make_raw_eval_fn(self, ticket: SearchTicket):
+        """Raw-array eval hook for the chunked GA/SA engines.
+
+        ``eval_fn(pe, kt, df) -> (b,) fitness`` with already-decoded raw
+        values (the engines own their genome decode -- the same f32 table
+        gather either way).  GA populations are the largest eval batches in
+        the system, so fusing them here is what lets one dispatch serve a
+        whole generation alongside concurrent random/grid/bo traffic.  Every
+        call doubles as a cancellation point, which is how GA/SA observe
+        ``ticket.cancel()`` within one generation / annealing step.
+        """
+        request = ticket.request
+        ecfg = request.env
+        layers, _, _, budget = self._decode_tables(request)
+        batcher = self.batcher
+
+        def eval_fn(pe, kt, df):
+            if ticket.cancelled:
+                raise SearchCancelled(f"search {ticket.uid} cancelled")
+            return batcher.evaluate(layers, pe, kt, df, ecfg, budget)
 
         return eval_fn
 

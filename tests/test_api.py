@@ -186,6 +186,54 @@ def test_ac_search_resumes_from_prior_state():
         hist_full["best_value"])
 
 
+def test_ga_search_resumes_from_prior_state():
+    """run_ga_search: one full run == two halves stitched via ``state=``."""
+    from repro.core import ga as ga_lib
+
+    full_cfg = ga_lib.GAConfig(population=20, generations=20, seed=9)
+    half_cfg = ga_lib.GAConfig(population=20, generations=10, seed=9)
+    state_full, hist_full = ga_lib.run_ga_search(_wl(), ECFG, full_cfg)
+    state_half, hist_a = ga_lib.run_ga_search(_wl(), ECFG, half_cfg)
+    state_res, hist_b = ga_lib.run_ga_search(_wl(), ECFG, half_cfg,
+                                             state=state_half)
+    assert float(state_res.best_val) == float(state_full.best_val)
+    assert int(state_res.generation) == 20
+    assert np.concatenate([hist_a, hist_b]).tobytes() == hist_full.tobytes()
+    assert (np.asarray(state_res.best_genome).tobytes()
+            == np.asarray(state_full.best_genome).tobytes())
+
+
+def test_sa_search_resumes_from_prior_state():
+    """run_sa_search: one full run == two halves stitched via ``state=``."""
+    cfg = baselines.SAConfig(seed=5)
+    state_full, hist_full = baselines.run_sa_search(_wl(), ECFG, 100, cfg)
+    state_half, hist_a = baselines.run_sa_search(_wl(), ECFG, 50, cfg)
+    state_res, hist_b = baselines.run_sa_search(_wl(), ECFG, 50, cfg,
+                                                state=state_half)
+    assert float(state_res.best_fit) == float(state_full.best_fit)
+    assert int(state_res.step) == 100
+    assert np.concatenate([hist_a, hist_b]).tobytes() == hist_full.tobytes()
+    assert (np.asarray(state_res.best_genome).tobytes()
+            == np.asarray(state_full.best_genome).tobytes())
+
+
+@pytest.mark.parametrize("method,opts", [
+    ("ga", {"population": 30}), ("sa", {}),
+])
+def test_ga_sa_streaming_matches_single_shot(method, opts):
+    """Chunked (streaming) GA/SA runs are byte-identical to one-shot runs."""
+    plain = api.run_search(_req(method, eps=150, seed=11, options=opts))
+    trials = []
+    streamed = api.run_search(_req(method, eps=150, seed=11, options=opts,
+                                   on_progress=trials.append,
+                                   progress_every=50))
+    assert streamed.best_value == plain.best_value
+    assert streamed.history.tobytes() == plain.history.tobytes()
+    assert len(trials) >= 2
+    steps = [t.step for t in trials]
+    assert steps == sorted(steps) and steps[-1] == 150
+
+
 # ---------------------------------------------------------------------------
 # Distributed wrappers.
 # ---------------------------------------------------------------------------

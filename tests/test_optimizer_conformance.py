@@ -1,0 +1,110 @@
+"""Cross-optimizer conformance: every registry name honors the unified
+``SearchRequest``/``SearchOutcome`` contract.
+
+Parametrized over ``api.list_optimizers()`` -- a newly registered method is
+covered automatically (and fails here first if it breaks the schema).  The
+contract, per method:
+
+  * fixed seed => deterministic ``SearchOutcome`` (best/history/pe/kt bytes);
+  * ``history`` is a per-sample best-so-far trace: length == ``eps``,
+    monotone non-increasing once finite, ending at ``best_value``;
+  * streamed ``Trial``s cover the full budget (max step == eps, monotone
+    per shard) -- trial accounting matches the request;
+  * chunked engines (the RL family, ga, sa) stream at least one Trial
+    *before* completion (live progress, not a post-hoc replay).
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import env as env_lib
+
+ECFG = env_lib.EnvConfig(platform="cloud")
+
+# Per-method budget/options keeping the sweep fast on a 2-core container.
+# Every canonical registry name must appear here -- the completeness test
+# below fails when a new optimizer is registered without a conformance row.
+CASES = {
+    "random": (150, {}),
+    "grid": (150, {}),
+    "bo": (150, {"init_random": 32, "batch": 16}),
+    "sa": (150, {}),
+    "ga": (120, {"population": 30}),
+    "reinforce": (30, {}),
+    "two_stage": (30, {"ga": {"generations": 40}}),
+    "a2c": (20, {}),
+    "ppo2": (20, {}),
+    "fanout": (100, {"inner": "random", "n_shards": 2, "backend": "serial"}),
+    "dist_reinforce": (20, {}),
+}
+
+# Engines that stream live through on_chunk (cancellation points); the
+# single-shot baselines emit their trace post-hoc instead.
+CHUNKED = ("reinforce", "two_stage", "a2c", "ppo2", "ga", "sa")
+
+
+def _req(method, **kw):
+    eps, options = CASES[method]
+    return api.SearchRequest(workload="ncf", env=ECFG, eps=eps, seed=7,
+                             method=method, options=dict(options), **kw)
+
+
+def test_every_registered_method_has_a_conformance_case():
+    assert set(CASES) == set(api.list_optimizers())
+
+
+@pytest.mark.parametrize("method", sorted(CASES))
+def test_outcome_contract(method):
+    eps = CASES[method][0]
+    out = api.run_search(_req(method))
+    assert out.method == method
+    assert out.eps == eps and out.seed == 7
+    assert out.history.shape == (eps,)
+    finite = out.history[np.isfinite(out.history)]
+    assert np.all(np.diff(finite) <= 1e-9)      # monotone best-so-far
+    assert out.history[-1] == pytest.approx(out.best_value)
+    N = out.pe.shape[0]
+    assert out.pe.shape == out.kt.shape == out.df.shape == (N,)
+    assert 1 <= out.samples_to_convergence <= eps
+    assert out.feasible == bool(np.isfinite(out.best_value))
+
+
+@pytest.mark.parametrize("method", sorted(CASES))
+def test_fixed_seed_is_deterministic(method):
+    a = api.run_search(_req(method))
+    b = api.run_search(_req(method))
+    assert a.best_value == b.best_value
+    assert a.history.tobytes() == b.history.tobytes()
+    assert a.pe.tobytes() == b.pe.tobytes()
+    assert a.kt.tobytes() == b.kt.tobytes()
+
+
+@pytest.mark.parametrize("method", sorted(CASES))
+def test_trial_stream_covers_the_budget(method):
+    eps = CASES[method][0]
+    trials = []
+    out = api.run_search(_req(method, on_progress=trials.append,
+                              progress_every=max(eps // 3, 1)))
+    assert trials, "no Trial ever streamed"
+    by_shard = {}
+    for t in trials:
+        assert 1 <= t.step <= eps
+        by_shard.setdefault(t.shard, []).append(t.step)
+    for steps in by_shard.values():
+        assert steps == sorted(steps)           # monotone per shard
+        assert steps[-1] == eps                 # full budget accounted
+    # best_value converges to the outcome's best.
+    assert min(t.best_value for t in trials) == pytest.approx(out.best_value)
+
+
+@pytest.mark.parametrize("method", CHUNKED)
+def test_chunked_engines_stream_before_completion(method):
+    """Live streaming: the first Trial arrives mid-run (step < eps), not as
+    a post-hoc replay of a finished trace -- this is the cancellation
+    point the search service relies on."""
+    eps = CASES[method][0]
+    trials = []
+    api.run_search(_req(method, on_progress=trials.append,
+                        progress_every=max(eps // 3, 1)))
+    assert len(trials) >= 2
+    assert trials[0].step < eps

@@ -62,6 +62,46 @@ def test_chunked_engine_identical_to_serial(svc):
     np.testing.assert_allclose(got.history, want.history)
 
 
+def test_ga_sa_through_service_byte_identical_to_serial(svc):
+    """ga/sa route their fitness through the fused batcher (raw eval_fn);
+    outcomes must equal the serial in-graph runs byte for byte."""
+    cases = [("ga", {"population": 40}), ("sa", {})]
+    serial = [api.run_search(_req(m, eps=200, seed=3, options=dict(o)))
+              for m, o in cases]
+    points_before = svc.stats()["points"]
+    tickets = [svc.submit(_req(m, eps=200, seed=3, options=dict(o)))
+               for m, o in cases]
+    for t, want in zip(tickets, serial):
+        got = t.result(timeout=300)
+        assert got.best_value == want.best_value
+        assert got.history.tobytes() == want.history.tobytes()
+        np.testing.assert_array_equal(got.pe, want.pe)
+        np.testing.assert_array_equal(got.kt, want.kt)
+    # The fused path actually ran: GA/SA points flowed through the batcher.
+    assert svc.stats()["points"] > points_before
+
+
+def test_dispatch_pool_byte_identical_to_single_thread():
+    """A multi-worker dispatch pool returns the same bytes as one thread."""
+    reqs = [("random", {}), ("ga", {"population": 30}), ("sa", {}),
+            ("grid", {})]
+    outs = {}
+    for workers in (1, 3):
+        svc = SearchService(ServiceConfig(max_workers=4,
+                                          dispatch_workers=workers))
+        try:
+            outs[workers] = svc.run_all(
+                [_req(m, eps=200, seed=2, options=dict(o)) for m, o in reqs])
+            assert svc.stats()["dispatch_workers"] == workers
+        finally:
+            svc.close()
+    for a, b in zip(outs[1], outs[3]):
+        assert a.best_value == b.best_value
+        assert a.history.tobytes() == b.history.tobytes()
+        np.testing.assert_array_equal(a.pe, b.pe)
+        np.testing.assert_array_equal(a.kt, b.kt)
+
+
 def test_same_seed_concurrent_duplicates_agree(svc):
     """Identical queries racing each other return identical outcomes."""
     tickets = [svc.submit(_req("random", eps=300, seed=5)) for _ in range(4)]
@@ -147,6 +187,38 @@ def test_cancel_mid_stream_chunked_engine(svc):
         t.result(timeout=120)
     assert t.status == "cancelled"
     assert svc.stats()["cancelled"] == 1
+
+
+@pytest.mark.parametrize("method,opts,chunk_samples", [
+    ("ga", {"population": 50}, 100),   # progress_every=100 -> 2-gen chunks
+    ("sa", {}, 100),                   # progress_every=100 -> 100-step chunks
+])
+def test_cancel_ga_sa_within_one_chunk(svc, method, opts, chunk_samples):
+    """GA/SA cancel at chunk granularity now, not at run end: submit an
+    effectively unbounded search, cancel after the first progress event,
+    and require the engine to stop within one further chunk."""
+    eps = 10_000_000
+    got = []
+    t = svc.submit(_req(method, eps=eps, on_progress=got.append,
+                        progress_every=chunk_samples, options=dict(opts)))
+    deadline = time.time() + 120
+    while not got and time.time() < deadline:
+        time.sleep(0.02)
+    assert got, "no progress streamed before deadline"
+    t.cancel()
+    # Baseline AFTER cancel(): the flag is set, so the engine can append at
+    # most the in-flight chunk plus one boundary that races the flag.
+    # (Reading before cancel() would let a main-thread stall between the
+    # read and the cancel inflate the gap and flake the bound.)
+    at_cancel = t.trials[-1].step
+    with pytest.raises(SearchCancelled):
+        t.result(timeout=120)
+    assert t.status == "cancelled"
+    # Stopped within one chunk of the cancel (+ one chunk of slack for a
+    # boundary that races the cancel flag) -- nowhere near the 10M-sample
+    # budget the old run-to-completion engines would have burned.
+    last = t.trials[-1].step
+    assert last <= at_cancel + 2 * chunk_samples
 
 
 def test_cancelled_request_does_not_stall_batcher(svc):
