@@ -26,6 +26,7 @@ BENCHES = [
     ("table9_policy", "benchmarks.bench_table9_policy"),
     ("fig6_critic", "benchmarks.bench_fig6_critic"),
     ("fig7_convergence", "benchmarks.bench_fig7_convergence"),
+    ("relaxed_oneshot", "benchmarks.bench_relaxed_oneshot"),
     ("costmodel_throughput", "benchmarks.bench_costmodel_throughput"),
     ("dist_search", "benchmarks.bench_dist_search"),
     ("fanout_backends", "benchmarks.bench_fanout_backends"),

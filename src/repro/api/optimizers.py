@@ -21,6 +21,7 @@ from repro.core import env as env_lib
 from repro.core import ga as ga_lib
 from repro.core import policy as policy_lib
 from repro.core import reinforce
+from repro.core import relaxed as relaxed_lib
 from repro.core import rl_baselines
 from repro.core import search as search_lib
 
@@ -176,6 +177,58 @@ class GeneticAlgorithmOptimizer:
                         trace, t0,
                         extras={"generations": cfg.generations,
                                 "population": cfg.population},
+                        streamed=request.on_progress is not None)
+
+
+@register("relaxed", aliases=("oneshot", "gradient"))
+class RelaxedOptimizer:
+    """One-shot gradient descent through the differentiable soft cost model.
+
+    Chunked like SA: descent rounds stream live through ``on_chunk`` (the
+    search service's cancellation point), the state resumes, and an injected
+    ``eval_fn`` routes the per-round hard probes through the cross-request
+    batcher -- byte-identical outcomes either way.  ``eps`` counts hard
+    evaluations; the gradient steps in between ride on the soft model and
+    are free of hard-model cost.
+    """
+
+    name = "relaxed"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        opts = request.options
+        cfg = relaxed_lib.RelaxedConfig(
+            lr=opts.get("lr", 0.05),
+            steps_per_eval=opts.get("steps_per_eval", 25),
+            restarts=opts.get("restarts", 4),
+            tau_start=opts.get("tau_start", 1.0),
+            tau_min=opts.get("tau_min", 0.05),
+            tau_decay=opts.get("tau_decay", 0.92),
+            penalty=opts.get("penalty", 10.0),
+            topk=opts.get("topk", 4),
+            seed=request.seed)
+        wl = request.resolve_workload()
+        env = env_lib.make_env(wl, request.env)
+        if request.on_progress is None:
+            chunk, on_chunk = None, None
+        else:
+            def on_chunk(state, hist, evals_done):
+                request.on_progress(Trial(
+                    min(evals_done, request.eps),
+                    float(np.min(hist)), float(state.best_fit)))
+
+            chunk = max(request.progress_every, 1)
+        state, hist = relaxed_lib.run_relaxed_search(
+            wl, request.env, eps=request.eps, cfg=cfg, chunk=chunk,
+            on_chunk=on_chunk, eval_fn=opts.get("eval_fn"), env=env)
+        pe, kt, df = relaxed_lib.relaxed_solution(state)
+        feasible = bool(np.isfinite(float(state.best_fit)))
+        return _outcome(request, self.name, float(state.best_fit),
+                        pe if feasible else None, kt if feasible else None,
+                        df if feasible else None, hist, t0,
+                        extras={"gradient_steps": int(state.gstep),
+                                "hard_evals": int(state.evals),
+                                "final_tau": float(state.tau)},
                         streamed=request.on_progress is not None)
 
 

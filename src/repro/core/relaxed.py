@@ -1,0 +1,307 @@
+"""One-shot relaxed search: gradient descent through the soft cost model.
+
+The discrete per-layer assignment space (PE count, per-PE tile ``kt``,
+dataflow style) is relaxed to a continuous one -- ``(pe, kt)`` become boxed
+reals via a sigmoid reparameterization and the dataflow choice becomes a
+softmax simplex, in the style of Gumbel-softmax supernet searches.  The
+engine then *descends the cost model itself*: ``jax.grad`` of the soft
+MAESTRO twin (:func:`repro.costmodel.maestro.soft_model_cost`) flows through
+every layer's variables jointly, so one gradient run replaces thousands of
+black-box episodes.
+
+Anatomy of a run (``eps`` counts whole-model *hard* evaluations, same
+accounting as every other engine):
+
+  * ``restarts`` parallel replicas descend the soft landscape with Adam;
+    the soft objective is ``log(objective)`` plus a softplus penalty on
+    relative constraint-budget violation (differentiable twin of the hard
+    infeasible -> +inf rule).
+  * The temperature ``tau`` anneals geometrically each round, sharpening
+    the soft surrogates toward the exact hard semantics as descent
+    converges (coarse landscape first, exact landscape last).
+  * Every round (= ``steps_per_eval`` gradient steps) the replica with the
+    best soft loss is rounded to integers and scored by the *hard* model --
+    that is the engine's per-sample history, and those hard probes keep the
+    reported best honest (the soft model guides, the hard model judges).
+  * The final ``topk`` budget is spent re-scoring rounding variants
+    (floor/ceil combinations) of the best replica's continuous point: the
+    nearest integer point is not always the best one in a staircase
+    landscape.
+
+The engine honors the shared chunked/resumable contract of
+:func:`repro.core.baselines.run_sa_search`: ``state`` resumes, ``chunk`` +
+``on_chunk`` stream progress between chunks (the search service's
+cancellation point), and an injected ``eval_fn(pe, kt, df) -> (b,) fitness``
+routes the hard probes through the cross-request batcher, byte-identical to
+the in-graph path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as env_lib
+from repro.costmodel import dataflows as dfl
+from repro.costmodel import maestro
+
+
+@dataclasses.dataclass(frozen=True)
+class RelaxedConfig:
+    """Knobs of the one-shot relaxed engine."""
+
+    lr: float = 0.05               # Adam step size on the relaxed params
+    steps_per_eval: int = 25       # gradient steps bought per hard probe
+    restarts: int = 4              # parallel replicas (vmapped descent)
+    tau_start: float = 1.0         # initial surrogate temperature
+    tau_min: float = 0.05          # annealing floor (high-fidelity regime)
+    tau_decay: float = 0.92        # geometric decay per round
+    penalty: float = 10.0          # constraint-violation penalty weight
+    topk: int = 4                  # final rounding-variant re-scores (<= 4)
+    init_scale: float = 0.5        # stddev of the logit init (replica 0 = 0)
+    seed: int = 0
+
+
+class RelaxedState(NamedTuple):
+    """Descent carry: everything a resumed run needs.
+
+    ``params``/``m``/``v`` are ``(theta_pe, theta_kt, theta_df)`` pytrees of
+    shape ``(R, N)`` / ``(R, N)`` / ``(R, N, 3)`` -- Adam moments included so
+    a resume continues the *same* trajectory, not a re-warmed one.
+    """
+
+    params: tuple
+    m: tuple
+    v: tuple
+    tau: jnp.ndarray          # () f32 current surrogate temperature
+    gstep: jnp.ndarray        # () int32 gradient steps completed
+    best_fit: jnp.ndarray     # () f32 best hard fitness seen (inf = none)
+    best_pe: jnp.ndarray      # (N,) f32 rounded assignment of the best
+    best_kt: jnp.ndarray      # (N,) f32
+    best_df: jnp.ndarray      # (N,) f32
+    evals: jnp.ndarray        # () int32 hard evaluations consumed
+
+
+# Rounding variants tried in the final re-scoring pass, in order: the
+# round-to-nearest point is probed every round already, so the variants are
+# the floor/ceil corners of the continuous point's cell.
+_VARIANTS = ((jnp.floor, jnp.floor), (jnp.ceil, jnp.ceil),
+             (jnp.floor, jnp.ceil), (jnp.ceil, jnp.floor))
+
+
+def _decode(params, mix: bool, dataflow: int):
+    """Relaxed params -> continuous (pe, kt, df_weights), shapes (R, N[, 3]).
+
+    Sigmoid box constraints keep ``(pe, kt)`` inside the fine search bounds
+    (the same 1..160 x 1..16 space the second-stage GA explores); the
+    dataflow simplex is a plain softmax, pinned to the env's one-hot when
+    the search is not dataflow-mixing.
+    """
+    th_pe, th_kt, th_df = params
+    pe = dfl.PE_MIN + (dfl.PE_MAX - dfl.PE_MIN) * jax.nn.sigmoid(th_pe)
+    kt = dfl.KT_MIN + (dfl.KT_MAX - dfl.KT_MIN) * jax.nn.sigmoid(th_kt)
+    if mix:
+        df_w = jax.nn.softmax(th_df, axis=-1)
+    else:
+        df_w = jnp.broadcast_to(
+            jax.nn.one_hot(dataflow, dfl.NUM_DATAFLOWS), th_df.shape)
+    return pe, kt, df_w
+
+
+def _soft_loss(params, tau, env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+               cfg: RelaxedConfig):
+    """Per-replica soft objective: log-objective + budget penalty, (R,)."""
+    pe, kt, df_w = _decode(params, ecfg.mix, ecfg.dataflow)
+    mc = maestro.soft_model_cost(env.layers, pe, kt, df_w, tau, ecfg.scenario)
+    obj = mc.latency if ecfg.objective == "latency" else mc.energy
+    cons = mc.area if ecfg.constraint == "area" else mc.power
+    loss = jnp.log(obj + 1.0)
+    # Penalty on *relative* violation: scale-free across workloads and
+    # platforms, zero-gated for the unlimited platform (budget = inf).
+    rel = cons / env.budget - 1.0
+    pen = cfg.penalty * 0.05 * jax.nn.softplus(rel / 0.05)
+    return loss + jnp.where(jnp.isfinite(env.budget), pen, 0.0)
+
+
+def _round_candidate(pe, kt, df_w, mix: bool, dataflow: int,
+                     round_pe=jnp.round, round_kt=jnp.round):
+    """Continuous point -> integer (pe, kt, df) inside the search bounds."""
+    pe_i = jnp.clip(round_pe(pe), dfl.PE_MIN, dfl.PE_MAX)
+    kt_i = jnp.clip(round_kt(kt), dfl.KT_MIN, dfl.KT_MAX)
+    if mix:
+        df = jnp.argmax(df_w, axis=-1).astype(jnp.float32)
+    else:
+        df = jnp.full(pe_i.shape, float(dataflow), jnp.float32)
+    return pe_i, kt_i, df
+
+
+def _init_state(env: env_lib.EnvArrays, cfg: RelaxedConfig) -> RelaxedState:
+    N = env.num_layers
+    R = max(int(cfg.restarts), 1)
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    th_pe = cfg.init_scale * jax.random.normal(k1, (R, N))
+    th_kt = cfg.init_scale * jax.random.normal(k2, (R, N))
+    th_df = cfg.init_scale * jax.random.normal(k3, (R, N, dfl.NUM_DATAFLOWS))
+    # Replica 0 starts at the exact box center: a deterministic mid-range
+    # point that is feasible on most platforms and anchors the ensemble.
+    params = tuple(t.at[0].set(0.0) for t in (th_pe, th_kt, th_df))
+    zeros = tuple(jnp.zeros_like(t) for t in params)
+    return RelaxedState(
+        params=params, m=zeros, v=zeros,
+        tau=jnp.float32(cfg.tau_start),
+        gstep=jnp.zeros((), jnp.int32),
+        best_fit=jnp.float32(jnp.inf),
+        best_pe=jnp.full((N,), jnp.nan, jnp.float32),
+        best_kt=jnp.full((N,), jnp.nan, jnp.float32),
+        best_df=jnp.full((N,), jnp.nan, jnp.float32),
+        evals=jnp.zeros((), jnp.int32))
+
+
+def make_round_fn(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
+                  cfg: RelaxedConfig):
+    """Compiled one-round descent: ``steps_per_eval`` Adam steps + anneal.
+
+    Returns ``round_fn(state) -> (state, pe_i, kt_i, df)`` where the integer
+    arrays are the rounded candidate of the replica with the best soft loss
+    (hard scoring stays outside, so the search service's ``eval_fn`` can own
+    it).  One compiled program serves every round: ``tau`` is a traced input.
+    """
+    b1, b2, eps_adam = 0.9, 0.999, 1e-8
+    lr = cfg.lr
+
+    def total_loss(params, tau):
+        return jnp.sum(_soft_loss(params, tau, env, ecfg, cfg))
+
+    grad_fn = jax.grad(total_loss)
+
+    def adam_step(carry, _):
+        params, m, v, t, tau = carry
+        g = grad_fn(params, tau)
+        t = t + 1
+        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree_util.tree_map(
+            lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        tf = t.astype(jnp.float32)
+        scale = jnp.sqrt(1.0 - b2 ** tf) / (1.0 - b1 ** tf)
+        params = jax.tree_util.tree_map(
+            lambda p, mi, vi: p - lr * scale * mi / (jnp.sqrt(vi) + eps_adam),
+            params, m, v)
+        return (params, m, v, t, tau), None
+
+    @jax.jit
+    def round_fn(state: RelaxedState):
+        carry = (state.params, state.m, state.v, state.gstep, state.tau)
+        (params, m, v, t, _), _ = jax.lax.scan(
+            adam_step, carry, None, length=cfg.steps_per_eval)
+        tau = jnp.maximum(state.tau * cfg.tau_decay, cfg.tau_min)
+        losses = _soft_loss(params, tau, env, ecfg, cfg)
+        r = jnp.argmin(losses)
+        pe, kt, df_w = _decode(params, ecfg.mix, ecfg.dataflow)
+        pe_i, kt_i, df = _round_candidate(pe[r], kt[r], df_w[r],
+                                          ecfg.mix, ecfg.dataflow)
+        return state._replace(params=params, m=m, v=v, tau=tau,
+                              gstep=t), pe_i, kt_i, df
+
+    @jax.jit
+    def best_continuous(state: RelaxedState):
+        losses = _soft_loss(state.params, state.tau, env, ecfg, cfg)
+        r = jnp.argmin(losses)
+        pe, kt, df_w = _decode(state.params, ecfg.mix, ecfg.dataflow)
+        return pe[r], kt[r], df_w[r]
+
+    return round_fn, best_continuous
+
+
+def run_relaxed_search(workload, ecfg: env_lib.EnvConfig, eps: int = 100,
+                       cfg: RelaxedConfig = RelaxedConfig(),
+                       state: Optional[RelaxedState] = None,
+                       chunk: Optional[int] = None,
+                       on_chunk=None,
+                       eval_fn=None,
+                       env: Optional[env_lib.EnvArrays] = None):
+    """Chunked, resumable one-shot relaxed search.  Returns (state, history).
+
+    Spends ``eps`` *more* hard evaluations from ``state`` (fresh descent when
+    None): ``eps - topk`` descent rounds, then ``topk`` rounding-variant
+    re-scores of the best replica.  ``on_chunk(state, chunk_hist,
+    evals_done)`` fires between chunks -- the unified API streams progress
+    and observes cancellation there, exactly like ``run_sa_search``.
+    ``eval_fn(pe, kt, df) -> (1,) fitness`` moves hard probes to the host
+    (the search service injects its cross-request batcher); results are
+    byte-identical either way, and chunk boundaries never change them.
+    """
+    if env is None:
+        env = env_lib.make_env(workload, ecfg)
+    round_fn, best_continuous = make_round_fn(env, ecfg, cfg)
+
+    @jax.jit
+    def hard_fit(pe, kt, df):
+        perf, cons, feas = env_lib.genome_cost(env, ecfg, pe, kt, df)
+        return jnp.where(feas, perf, jnp.inf)
+
+    def score(pe, kt, df):
+        if eval_fn is None:
+            return float(hard_fit(pe, kt, df))
+        pe = np.asarray(pe, np.float32)[None]
+        kt = np.asarray(kt, np.float32)[None]
+        df = (np.float32(ecfg.dataflow) if not ecfg.mix
+              else np.asarray(df, np.float32)[None])
+        return float(np.asarray(eval_fn(pe, kt, df), np.float32)[0])
+
+    def absorb(state, fit, pe, kt, df):
+        if fit < float(state.best_fit):
+            state = state._replace(
+                best_fit=jnp.float32(fit),
+                best_pe=jnp.asarray(pe, jnp.float32),
+                best_kt=jnp.asarray(kt, jnp.float32),
+                best_df=jnp.asarray(df, jnp.float32))
+        return state._replace(evals=state.evals + 1)
+
+    if state is None:
+        state = _init_state(env, cfg)
+
+    n_var = min(max(int(cfg.topk), 0), len(_VARIANTS), eps - 1)
+    rounds = eps - n_var
+    chunk = rounds if not chunk else max(int(chunk), 1)
+    hist = []
+    done = 0
+    while done < rounds:
+        n = min(chunk, rounds - done)
+        h = np.empty((n,), np.float32)
+        for s in range(n):
+            state, pe_i, kt_i, df = round_fn(state)
+            state = absorb(state, score(pe_i, kt_i, df), pe_i, kt_i, df)
+            h[s] = np.float32(state.best_fit)
+        hist.append(h)
+        done += n
+        if on_chunk is not None:
+            on_chunk(state, h, done)
+    if n_var:
+        # Final budget: hard-score the floor/ceil rounding variants of the
+        # best replica's continuous point (staircase landscapes often hide
+        # the optimum one cell off round-to-nearest).
+        pe_c, kt_c, df_w = best_continuous(state)
+        h = np.empty((n_var,), np.float32)
+        for i in range(n_var):
+            rp, rk = _VARIANTS[i]
+            pe_i, kt_i, df = _round_candidate(pe_c, kt_c, df_w,
+                                              ecfg.mix, ecfg.dataflow, rp, rk)
+            state = absorb(state, score(pe_i, kt_i, df), pe_i, kt_i, df)
+            h[i] = np.float32(state.best_fit)
+        hist.append(h)
+        done += n_var
+        if on_chunk is not None:
+            on_chunk(state, h, done)
+    return state, (np.concatenate(hist) if hist
+                   else np.empty((0,), np.float32))
+
+
+def relaxed_solution(state: RelaxedState):
+    """Best rounded assignment seen: raw (pe, kt, df) arrays (NaN = none)."""
+    return (np.asarray(state.best_pe), np.asarray(state.best_kt),
+            np.asarray(state.best_df))

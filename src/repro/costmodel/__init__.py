@@ -3,6 +3,8 @@
 Public API:
   LayerSpec / layers_to_array   -- workload descriptors
   evaluate / evaluate_batch     -- latency/energy/area/power for design points
+  soft_evaluate / soft_model_cost -- differentiable relaxation (see maestro)
+  content_hash                  -- cache-versioning hash of the model sources
   PE_LEVELS / KT_LEVELS         -- the paper's L=12 coarse action tables
   workloads                     -- paper DNNs + assigned-architecture lowering
 """
@@ -24,7 +26,15 @@ from repro.costmodel.dataflows import (
     PE_LEVELS,
     KT_LEVELS,
 )
-from repro.costmodel.maestro import CostOut, evaluate, evaluate_point, model_cost
+from repro.costmodel.maestro import (
+    CostOut,
+    content_hash,
+    evaluate,
+    evaluate_point,
+    model_cost,
+    soft_evaluate,
+    soft_model_cost,
+)
 
 __all__ = [
     "LayerSpec",
@@ -42,7 +52,10 @@ __all__ = [
     "PE_LEVELS",
     "KT_LEVELS",
     "CostOut",
+    "content_hash",
     "evaluate",
     "evaluate_point",
     "model_cost",
+    "soft_evaluate",
+    "soft_model_cost",
 ]

@@ -60,8 +60,8 @@ PE_MIN, PE_MAX = 1, 160
 KT_MIN, KT_MAX = 1, 16
 
 
-def l1_bytes_formula(dataflow, kt, R, S):
-    """L1 buffer bytes per PE (elements, 1 B each) for a dataflow style.
+def l1_bytes_by_style(kt, R, S):
+    """Per-style L1 buffer bytes per PE: ``(dla, eye, shi)`` formulas.
 
     dla: kt filters (kt*R*S) + one input patch (R*S) + kt partial outputs
          -> kt*R*S + R*S + kt     (Table I for R=S=3: 19..129)
@@ -70,14 +70,26 @@ def l1_bytes_formula(dataflow, kt, R, S):
     shi: one filter (R*S) + kt psums + kt-neighbourhood of inputs
          -> R*S + 2*kt
 
+    The shared dataflow-term primitive behind both selections: the hard
+    model picks one formula by integer id (:func:`l1_bytes_formula`), the
+    soft model blends all three with its dataflow simplex weights.  Each
+    formula is linear in ``kt``, hence already smooth.
+    """
+    rs = R * S
+    dla_b = kt * rs + rs + kt
+    eye_b = kt * S + S + kt
+    shi_b = rs + 2 * kt
+    return dla_b, eye_b, shi_b
+
+
+def l1_bytes_formula(dataflow, kt, R, S):
+    """L1 buffer bytes per PE for an integer dataflow id (hard selection).
+
     ``dataflow`` may be a scalar or an array (broadcast, branch-free) so the
     MIX co-automation agent can treat it as a third per-layer action.
     """
     import jax.numpy as jnp  # local import keeps module importable w/o jax
 
-    rs = R * S
-    dla_b = kt * rs + rs + kt
-    eye_b = kt * S + S + kt
-    shi_b = rs + 2 * kt
+    dla_b, eye_b, shi_b = l1_bytes_by_style(kt, R, S)
     df = jnp.asarray(dataflow)
     return jnp.where(df == DLA, dla_b, jnp.where(df == EYE, eye_b, shi_b))

@@ -61,14 +61,43 @@ Absolute numbers are NOT calibrated against the MAESTRO binary (DESIGN.md S5)
 -- the paper's claims we reproduce are *relative* search-quality /
 sample-efficiency comparisons, which depend on the landscape structure, not
 on absolute cycle counts.
+
+Hard / soft split
+-----------------
+
+The model core is parameterized over the plateau-op primitives of
+:mod:`repro.costmodel.primitives`:
+
+  * the **hard** path (:func:`core_cost` / :func:`evaluate` /
+    :func:`model_cost`, ``prims=HARD``) lowers the exact ``ceil``/``floor``/
+    ``where`` ops, bit-identical to the pre-split implementation -- it is the
+    oracle for ``kernels/ref.py``, the Pallas kernel and every benchmark;
+  * the **soft** path (:func:`soft_core_cost` / :func:`soft_evaluate` /
+    :func:`soft_model_cost`) runs the SAME dataflow-term math with
+    temperature-controlled smooth surrogates and a dataflow *simplex*
+    (weights over dla/eye/shi instead of an integer id), so
+    ``jax.grad`` of latency/energy/EDP w.r.t. continuous per-layer
+    ``(pe, kt)`` and the dataflow weights is finite and non-zero everywhere
+    -- including on the hard model's over-provisioning plateaus.  The
+    ``relaxed`` one-shot engine (:mod:`repro.core.relaxed`) descends it
+    directly.
 """
 from __future__ import annotations
 
+import functools
+import hashlib
 from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.costmodel.dataflows import DLA, EYE, SHI, l1_bytes_formula
+from repro.costmodel import primitives as prim_lib
+from repro.costmodel.dataflows import (
+    DLA,
+    EYE,
+    SHI,
+    l1_bytes_by_style,
+    l1_bytes_formula,
+)
 from repro.costmodel.layers import (
     F_C,
     F_K,
@@ -80,6 +109,8 @@ from repro.costmodel.layers import (
     F_Y,
     DWCONV,
 )
+
+HARD = prim_lib.HARD
 
 # ---------------------------------------------------------------------------
 # Hardware constants (45nm-era, order-of-magnitude; units documented).
@@ -126,18 +157,20 @@ def _ceil_div(a, b):
     return jnp.ceil(a / jnp.maximum(b, 1.0))
 
 
-def _factorize(pe, d1, d2):
+def _factorize(pe, d1, d2, prims=HARD):
     """Split ``pe`` PEs over two parallel dims (d1 outer): p1*p2 <= pe."""
-    p1 = jnp.clip(pe, 1.0, jnp.maximum(d1, 1.0))
-    p2 = jnp.clip(jnp.floor(pe / p1), 1.0, jnp.maximum(d2, 1.0))
+    p1 = prims.clip(pe, 1.0, prims.maximum(d1, 1.0))
+    p2 = prims.clip(prims.floor_div(pe, p1), 1.0, prims.maximum(d2, 1.0))
     return p1, p2
 
 
 def _dataflow_terms(df_is, is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
-                    W_u, A_u, O_u):
+                    W_u, A_u, O_u, prims=HARD):
     """compute cycles + (W, A, O) L2 traffic for one dataflow style.
 
-    ``df_is`` selects the style branch-free via weights in {0,1}.
+    ``df_is`` selects the style branch-free via weights: exact one-hots on
+    the hard path, a simplex on the soft path (every term below is already
+    a convex combination over styles, so the relaxation reuses it verbatim).
     Returns (compute_cycles, l2_traffic) for the *selected* style.
 
     DWCONV activations: output channel k reads ONLY input channel k, so
@@ -148,38 +181,40 @@ def _dataflow_terms(df_is, is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
     the tile size under NVDLA-style -- the paper's Layer-23 observation.
     """
     is_dla, is_eye, is_shi = df_is
-    Ku = _ceil_div(K_out, kt)
+    cdiv = prims.ceil_div
+    Ku = cdiv(K_out, kt)
 
     # ---- dla: parallel (Ku, C_red) --------------------------------------
-    p1d, p2d = _factorize(pe, Ku, C_red)
-    t1d = _ceil_div(Ku, p1d)
-    t2d = _ceil_div(C_red, p2d)
-    kt_eff_d = jnp.minimum(kt, _ceil_div(K_out, p1d * t1d))
+    p1d, p2d = _factorize(pe, Ku, C_red, prims)
+    t1d = cdiv(Ku, p1d)
+    t2d = cdiv(C_red, p2d)
+    kt_eff_d = prims.minimum(kt, cdiv(K_out, p1d * t1d))
     comp_dla = t1d * t2d * kt_eff_d * R * S * Yp * Xp
-    a_passes_dla = jnp.where(is_dw > 0, 1.0, t1d)   # disjoint dw channels
+    a_passes_dla = prims.blend(is_dw, 1.0, t1d)     # disjoint dw channels
     l2_dla = (W_u                      # weight-stationary: once
               + A_u * a_passes_dla     # activation multicast / K-iteration
               + O_u * p2d)             # psum collection width
 
     # ---- eye: parallel (Y', R); temporal over C and Ku -------------------
-    p1e, p2e = _factorize(pe, Yp, R)
-    t1e = _ceil_div(Yp, p1e)
-    t2e = _ceil_div(R, p2e)
-    kt_eff_e = jnp.minimum(kt, K_out)
+    p1e, p2e = _factorize(pe, Yp, R, prims)
+    t1e = cdiv(Yp, p1e)
+    t2e = cdiv(R, p2e)
+    kt_eff_e = prims.minimum(kt, K_out)
     comp_eye = t1e * t2e * C_red * Ku * kt_eff_e * S * Xp
-    halo_e = (p1e + R - 1.0) / jnp.maximum(p1e, 1.0)
-    a_passes_eye = jnp.where(is_dw > 0, 1.0, Ku)    # disjoint dw channels
+    halo_e = (p1e + R - 1.0) / prims.maximum(p1e, 1.0)
+    a_passes_eye = prims.blend(is_dw, 1.0, Ku)      # disjoint dw channels
     l2_eye = (W_u * t1e                # rows re-staged per temporal block
               + A_u * a_passes_eye * halo_e  # per filter-group + row halo
               + O_u * p2e)
 
     # ---- shi: parallel (Y', X'); temporal over C and Ku ------------------
-    p1s, p2s = _factorize(pe, Yp, Xp)
-    t1s = _ceil_div(Yp, p1s)
-    t2s = _ceil_div(Xp, p2s)
-    kt_eff_s = jnp.minimum(kt, K_out)
+    p1s, p2s = _factorize(pe, Yp, Xp, prims)
+    t1s = cdiv(Yp, p1s)
+    t2s = cdiv(Xp, p2s)
+    kt_eff_s = prims.minimum(kt, K_out)
     comp_shi = t1s * t2s * C_red * Ku * kt_eff_s * R * S
-    halo_s = ((p1s + R - 1.0) * (p2s + S - 1.0)) / jnp.maximum(p1s * p2s, 1.0)
+    halo_s = ((p1s + R - 1.0) * (p2s + S - 1.0)) / prims.maximum(
+        p1s * p2s, 1.0)
     l2_shi = (W_u * t1s * t2s          # weights streamed per output tile
               + A_u * halo_s           # neighbour-shift reuse, halo only
               + O_u)
@@ -195,24 +230,21 @@ def _dataflow_terms(df_is, is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
     return comp, l2, passes_w, passes_a
 
 
-def core_cost(K, C, Y, X, R, S, ltype, repeat, pe, kt, df):
-    """The model core on unpacked float32 field arrays (broadcastable).
+def _gated_cost(K, C, Y, X, R, S, repeat, pe, kt, df_w, is_dw, l1_bytes,
+                prims):
+    """The shared model body below the gates: one set of dataflow-term math.
 
-    Shared verbatim between the pure-jnp oracle (:func:`evaluate`, which is
-    ``kernels/ref.py``'s ground truth) and the Pallas TPU kernel
-    (``kernels/costmodel_eval.py``) -- both lower exactly these ops.
+    ``df_w = (w_dla, w_eye, w_shi)`` are style weights (exact one-hots on the
+    hard path, a simplex on the soft path); ``is_dw`` the depthwise gate;
+    ``l1_bytes`` the style-selected L1 size (nested-``where`` hard, weighted
+    blend soft).  Every plateau op routes through ``prims``; data-side shape
+    arithmetic (Yp/Xp/macs/traffic volumes) is smooth already and stays
+    shared verbatim.
     """
-    pe = jnp.maximum(pe, 1.0)
-    kt = jnp.maximum(kt, 1.0)
-    is_dla = (df == DLA).astype(jnp.float32)
-    is_eye = (df == EYE).astype(jnp.float32)
-    is_shi = (df == SHI).astype(jnp.float32)
-
     Yp = jnp.maximum(Y - R + 1.0, 1.0)
     Xp = jnp.maximum(X - S + 1.0, 1.0)
-    is_dw = (ltype == DWCONV).astype(jnp.float32)
-    C_red = jnp.where(is_dw > 0, 1.0, C)     # reduction channels
-    K_out = jnp.where(is_dw > 0, C, K)       # independent output dims
+    C_red = prims.blend(is_dw, 1.0, C)       # reduction channels
+    K_out = prims.blend(is_dw, C, K)         # independent output dims
 
     macs = K_out * C_red * Yp * Xp * R * S
     W_u = K_out * C_red * R * S              # unique weights
@@ -220,24 +252,22 @@ def core_cost(K, C, Y, X, R, S, ltype, repeat, pe, kt, df):
     O_u = K_out * Yp * Xp                    # unique outputs
 
     comp, l2_traffic, passes_w, passes_a = _dataflow_terms(
-        (is_dla, is_eye, is_shi), is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
-        W_u, A_u, O_u)
+        df_w, is_dw, K_out, C_red, Yp, Xp, R, S, pe, kt,
+        W_u, A_u, O_u, prims)
 
-    l1_bytes = l1_bytes_formula(df, kt, R, S)
     l2_bytes = 2.0 * pe * l1_bytes
 
     # DRAM refetch: an outer pass re-reads its tensor from DRAM only for the
     # fraction that spilled out of L2 (spill -> refetch ~ #passes; tensor
     # resident -> single streaming read).  This is what makes small-buffer
     # designs energy-catastrophic (Fig. 4's 2-orders-of-magnitude spread).
-    spill_w = jnp.clip(1.0 - l2_bytes / jnp.maximum(W_u, 1.0), 0.0, 1.0)
-    spill_a = jnp.clip(1.0 - l2_bytes / jnp.maximum(A_u, 1.0), 0.0, 1.0)
+    spill_w = prims.clip01(1.0 - l2_bytes / jnp.maximum(W_u, 1.0))
+    spill_a = prims.clip01(1.0 - l2_bytes / jnp.maximum(A_u, 1.0))
     dram_traffic = (W_u * (1.0 + (passes_w - 1.0) * spill_w)
                     + A_u * (1.0 + (passes_a - 1.0) * spill_a)
                     + O_u)
     l2_bw = L2_BW_BASE + L2_BW_SQRT * jnp.sqrt(pe)
-    lat = (jnp.maximum(jnp.maximum(comp, l2_traffic / l2_bw),
-                       dram_traffic / DRAM_BW)
+    lat = (prims.max3(comp, l2_traffic / l2_bw, dram_traffic / DRAM_BW)
            + jnp.sqrt(pe) + FILL_CYCLES)
 
     leak_mw = LEAK_PE_MW * pe + LEAK_L1_MW_B * l1_bytes * pe
@@ -260,8 +290,49 @@ def core_cost(K, C, Y, X, R, S, ltype, repeat, pe, kt, df):
         l1_bytes=l1_bytes,
         l2_bytes=l2_bytes,
         macs=macs * repeat,
-        util=macs / jnp.maximum(comp * pe, 1.0),
+        util=macs / prims.maximum(comp * pe, 1.0),
     )
+
+
+def core_cost(K, C, Y, X, R, S, ltype, repeat, pe, kt, df):
+    """The HARD model core on unpacked float32 field arrays (broadcastable).
+
+    Shared verbatim between the pure-jnp oracle (:func:`evaluate`, which is
+    ``kernels/ref.py``'s ground truth) and the Pallas TPU kernel
+    (``kernels/costmodel_eval.py``) -- both lower exactly these ops.  Bit-
+    identical to the pre hard/soft-split implementation (locked by the
+    golden-value tests in ``tests/test_relaxed.py``).
+    """
+    pe = jnp.maximum(pe, 1.0)
+    kt = jnp.maximum(kt, 1.0)
+    gate = HARD.eq_gate
+    df_w = (gate(df, DLA), gate(df, EYE), gate(df, SHI))
+    is_dw = gate(ltype, DWCONV)
+    l1_bytes = l1_bytes_formula(df, kt, R, S)
+    return _gated_cost(K, C, Y, X, R, S, repeat, pe, kt, df_w, is_dw,
+                       l1_bytes, HARD)
+
+
+def soft_core_cost(K, C, Y, X, R, S, ltype, repeat, pe, kt, df_weights, tau):
+    """The SOFT model core: smooth surrogates + a dataflow simplex.
+
+    ``df_weights``: (..., 3) weights over (dla, eye, shi) -- any convex
+    combination (e.g. a temperature-annealed softmax over logits); pass an
+    exact one-hot for a fixed-dataflow relaxation.  ``tau`` is the shared
+    surrogate temperature (traced scalar is fine).  Gradients w.r.t. ``pe``,
+    ``kt`` and ``df_weights`` are finite and non-zero everywhere, including
+    on the hard model's ceil-effect plateaus.
+    """
+    prims = prim_lib.soft(tau)
+    pe = prims.maximum(pe, 1.0)
+    kt = prims.maximum(kt, 1.0)
+    df_weights = jnp.asarray(df_weights, jnp.float32)
+    df_w = tuple(jnp.moveaxis(df_weights, -1, 0))
+    is_dw = prims.eq_gate(ltype, DWCONV)
+    dla_b, eye_b, shi_b = l1_bytes_by_style(kt, R, S)
+    l1_bytes = df_w[0] * dla_b + df_w[1] * eye_b + df_w[2] * shi_b
+    return _gated_cost(K, C, Y, X, R, S, repeat, pe, kt, df_w, is_dw,
+                       l1_bytes, prims)
 
 
 def evaluate(layers, pe, kt, dataflow):
@@ -317,3 +388,81 @@ def model_cost(layers, pe, kt, dataflow, scenario: str = "LP"):
                    jnp.max(out.l2_bytes, axis=-1),
                    jnp.sum(out.macs, axis=-1),
                    jnp.mean(out.util, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Soft (differentiable) evaluators -- same core, smooth primitives.
+# ---------------------------------------------------------------------------
+def soft_evaluate(layers, pe, kt, df_weights, tau=1.0):
+    """Differentiable twin of :func:`evaluate`.
+
+    Args:
+      layers:     (..., NUM_FIELDS) layer descriptors (data; not smoothed).
+      pe, kt:     (...,) CONTINUOUS design variables (any real >= ~1).
+      df_weights: (..., 3) dataflow simplex weights over (dla, eye, shi).
+      tau:        surrogate temperature; ``tau -> 0`` recovers the hard model
+                  pointwise (away from the staircase jump points).
+
+    Returns a :class:`CostOut` whose every field is smooth in ``pe``, ``kt``
+    and ``df_weights`` -- the input to ``jax.grad`` for the relaxed engine.
+    """
+    layers = jnp.asarray(layers)
+    f = lambda i: layers[..., i].astype(jnp.float32)
+    return soft_core_cost(
+        f(F_K), f(F_C), f(F_Y), f(F_X), f(F_R), f(F_S),
+        f(F_TYPE), f(F_REPEAT),
+        jnp.asarray(pe, jnp.float32), jnp.asarray(kt, jnp.float32),
+        df_weights, tau)
+
+
+def soft_model_cost(layers, pe, kt, df_weights, tau=1.0,
+                    scenario: str = "LP"):
+    """Differentiable twin of :func:`model_cost`.
+
+    Aggregation mirrors the hard semantics: objectives sum over layers in
+    both scenarios; the LS constraint ``max`` over layers (one shared design
+    provisioned for the largest demand) becomes the scale-invariant smooth
+    maximum so constraint gradients reach *every* layer's variables, not
+    just the argmax layer's.
+    """
+    out = soft_evaluate(layers, pe, kt, df_weights, tau)
+    lat = jnp.sum(out.latency, axis=-1)
+    en = jnp.sum(out.energy, axis=-1)
+    if scenario == "LP":
+        area = jnp.sum(out.area, axis=-1)
+        power = jnp.sum(out.power, axis=-1)
+    elif scenario == "LS":
+        p = 12.0 / jnp.clip(jnp.asarray(tau, jnp.float32), 1e-3, 1.0)
+        area = prim_lib.smooth_amax(out.area, p)
+        power = prim_lib.smooth_amax(out.power, p)
+    else:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    return CostOut(lat, en, area, power,
+                   jnp.max(out.l1_bytes, axis=-1),
+                   jnp.max(out.l2_bytes, axis=-1),
+                   jnp.sum(out.macs, axis=-1),
+                   jnp.mean(out.util, axis=-1))
+
+
+@functools.lru_cache(maxsize=1)
+def content_hash() -> str:
+    """Content hash of the cost-model definition (16 hex chars).
+
+    Covers every module whose source participates in a cost value: the model
+    core (this file), the plateau primitives, the dataflow tables/L1
+    formulas and the layer-descriptor packing.  Any math change -- hard or
+    soft, constants included -- changes the hash.  ``CostMemoCache`` mixes
+    it into every key so a cache (in-process today, disk/fleet-shared
+    tomorrow) can never serve a stale ``(lat, en, area, pw)`` tuple computed
+    by a different model.
+    """
+    import repro.costmodel.dataflows as _dataflows
+    import repro.costmodel.layers as _layers
+    import repro.costmodel.maestro as _maestro
+    import repro.costmodel.primitives as _primitives
+
+    h = hashlib.sha256()
+    for mod in (_maestro, _primitives, _dataflows, _layers):
+        with open(mod.__file__, "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()[:16]

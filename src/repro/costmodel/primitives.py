@@ -1,0 +1,184 @@
+"""Plateau-op primitives: one interface, a hard and a soft implementation.
+
+The MAESTRO-style model (:mod:`repro.costmodel.maestro`) owes its landscape
+structure to a handful of non-smooth ops -- ``ceil``-division tile counts,
+``floor``/``clip`` PE factorizations, hard ``min``/``max`` bottlenecks and
+branch gates.  Those same ops are what make the model useless to ``jax.grad``:
+their derivatives are zero (plateaus) or undefined (kinks) almost everywhere a
+search cares about.
+
+This module factors every such op behind one :class:`Primitives` record with
+two implementations sharing the model core:
+
+  * :func:`hard` -- the exact ops, verbatim.  The model core called with these
+    primitives is bit-identical to the pre-refactor implementation; it is the
+    oracle for ``kernels/ref.py``, the Pallas kernel, and every benchmark.
+  * :func:`soft` -- temperature-controlled smooth surrogates.  Every plateau
+    op becomes a sigmoid/softplus construction whose gradient is finite and
+    non-zero everywhere, and which converges pointwise to the hard op as the
+    temperature ``tau -> 0`` (away from the measure-zero jump points).
+
+Soft surrogate cheat-sheet (``tau`` is the shared temperature):
+
+  ceil(x)        -> smoothed unit staircase: ``floor(x) + step(frac(x))`` with
+                    a normalized sigmoid step whose center shrinks with tau, so
+                    integer inputs (exact tile divisions -- the common case)
+                    evaluate to the exact hard value at every temperature.
+  max(a, b)      -> ``b + t*softplus((a-b)/t)`` (softplus-clip; >= hard max).
+  min(a, b)      -> ``b - t*softplus((b-a)/t)`` (<= hard min; this is the op
+                    that frees the buffer-overprovision plateau: the gradient
+                    of ``min(kt, K_out)`` w.r.t. ``kt`` stays positive past
+                    ``K_out`` instead of snapping to zero).
+  clip(x, lo, hi)-> smooth max then smooth min.
+  max(a, b, c)   -> p-norm smooth maximum with ``p = 12/tau`` (scale-invariant,
+                    overshoot <= 3**(1/p); exact as tau -> 0).
+  1{x == v}      -> ``sigmoid((1/2 - |x - v|) / w)`` gate (``is_dw``, dataflow
+                    one-hots); sharp by construction, but smooth in x so the
+                    soft model is differentiable in *all* of its inputs.
+  where(g, a, b) -> convex blend ``g*a + (1-g)*b``.
+
+Everything here is plain jnp: both implementations trace under ``jit``,
+``vmap`` and ``grad``, and the hard one also lowers inside Pallas kernels.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Floor guard for ceil-division outputs on the soft path: hard ceil-division
+# never returns < 1, and letting the relaxation drift toward 0 would collapse
+# compute terms to ~0 and fabricate gradient toward meaningless regions.
+_GUARD_T = 0.02
+
+
+class Primitives(NamedTuple):
+    """The plateau-op interface shared by the hard and soft model cores."""
+
+    name: str
+    ceil_div: Callable    # ceil(a / max(b, 1))       -- tile / step counts
+    floor_div: Callable   # floor(a / b)              -- PE factorization
+    clip: Callable        # clip(x, lo, hi)           -- parallel-width bounds
+    maximum: Callable     # max(a, b)                 -- guards, bottlenecks
+    minimum: Callable     # min(a, b)                 -- kt_eff coverage caps
+    blend: Callable       # where(g, a, b) with g a {0,1}/[0,1] gate
+    clip01: Callable      # clip(x, 0, 1)             -- L2 spill fractions
+    max3: Callable        # max(a, b, c)              -- latency bottleneck
+    eq_gate: Callable     # 1{x == v} as f32          -- is_dw / dataflow
+
+
+# ---------------------------------------------------------------------------
+# Hard implementation: the exact ops, verbatim from the original model.
+# ---------------------------------------------------------------------------
+def hard() -> Primitives:
+    """Exact plateau ops -- bit-identical to the pre-refactor model."""
+    return Primitives(
+        name="hard",
+        ceil_div=lambda a, b: jnp.ceil(a / jnp.maximum(b, 1.0)),
+        floor_div=lambda a, b: jnp.floor(a / b),
+        clip=jnp.clip,
+        maximum=jnp.maximum,
+        minimum=jnp.minimum,
+        blend=lambda g, a, b: jnp.where(g > 0, a, b),
+        clip01=lambda x: jnp.clip(x, 0.0, 1.0),
+        max3=lambda a, b, c: jnp.maximum(jnp.maximum(a, b), c),
+        eq_gate=lambda x, v: (x == v).astype(jnp.float32),
+    )
+
+
+HARD = hard()
+
+
+# ---------------------------------------------------------------------------
+# Soft surrogates.
+# ---------------------------------------------------------------------------
+def soft_ceil(x, tau):
+    """Smooth, monotone staircase converging to ``ceil`` as ``tau -> 0``.
+
+    ``floor(x) + step(frac(x))`` where ``step`` is a sigmoid normalized to
+    hit exactly 0 at ``frac = 0`` and 1 at ``frac = 1`` (so the staircase is
+    continuous across cells and *exact at integer inputs* -- tile counts of
+    perfectly divisible dims keep their hard value at any temperature).  The
+    step's center tracks ``tau`` toward the left cell edge, matching ceil's
+    jump-at-integer semantics in the sharp limit.  The gradient
+    ``step'(frac)`` is finite and non-zero everywhere for ``tau > 0``.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    c = jnp.clip(0.5 * tau, 0.02, 0.5)          # step center
+    w = jnp.clip(0.25 * tau, 0.005, 0.25)       # step width
+    f = jnp.floor(x)
+    r = x - f
+    s = jax.nn.sigmoid((r - c) / w)
+    s0 = jax.nn.sigmoid(-c / w)
+    s1 = jax.nn.sigmoid((1.0 - c) / w)
+    return f + (s - s0) / (s1 - s0)
+
+
+def soft_floor(x, tau):
+    """Smooth floor: the mirrored staircase, ``-soft_ceil(-x, tau)``."""
+    return -soft_ceil(-x, tau)
+
+
+def smooth_max(a, b, t):
+    """``>=`` hard max, smooth, with softplus transition of width ``t``."""
+    return b + t * jax.nn.softplus((a - b) / t)
+
+
+def smooth_min(a, b, t):
+    """``<=`` hard min, smooth, with softplus transition of width ``t``."""
+    return b - t * jax.nn.softplus((b - a) / t)
+
+
+def smooth_clip(x, lo, hi, t):
+    return smooth_min(smooth_max(x, lo, t), hi, t)
+
+
+def smooth_amax(x, p, axis=-1):
+    """Scale-invariant smooth maximum of positives along ``axis``.
+
+    The p-norm ``(sum x^p)^(1/p)`` overshoots the hard max by at most
+    ``n**(1/p)``; gradients flow to every element (softmax-like weights).
+    The normalization by the stop-gradded hard max is algebraically exact
+    (the p-norm is 1-homogeneous), it only keeps ``x**p`` in f32 range.
+    """
+    m = jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(x, axis=axis, keepdims=True), 1e-30))
+    s = jnp.sum((x / m) ** p, axis=axis)
+    return jnp.squeeze(m, axis) * s ** (1.0 / p)
+
+
+def soft(tau) -> Primitives:
+    """Temperature-``tau`` smooth surrogates of every plateau op.
+
+    ``tau`` may be a traced scalar (the relaxed engine anneals it inside one
+    compiled program).  ``tau ~ 1`` gives a heavily smoothed landscape with
+    strong gradients everywhere; ``tau -> 0`` recovers the hard ops.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    t_guard = jnp.clip(0.1 * tau, 0.01, 0.1)    # lower-bound guards (x >= 1)
+    t_clip = jnp.clip(0.25 * tau, 0.01, 0.25)   # spill-fraction clipping
+    t_gate = 0.05 * jnp.clip(tau, 0.1, 1.0)     # indicator gates (sharp)
+    p = 12.0 / jnp.clip(tau, 1e-3, 1.0)         # latency-bottleneck p-norm
+
+    def ceil_div(a, b):
+        raw = soft_ceil(a / smooth_max(b, 1.0, t_guard), tau)
+        return smooth_max(raw, 1.0, _GUARD_T)
+
+    def max3(a, b, c):
+        return smooth_amax(jnp.stack(
+            jnp.broadcast_arrays(a, b, c), axis=-1), p)
+
+    return Primitives(
+        name="soft",
+        ceil_div=ceil_div,
+        floor_div=lambda a, b: soft_floor(a / b, tau),
+        clip=lambda x, lo, hi: smooth_clip(x, lo, hi, t_guard),
+        maximum=lambda a, b: smooth_max(a, b, t_guard),
+        minimum=lambda a, b: smooth_min(a, b, t_guard),
+        blend=lambda g, a, b: g * a + (1.0 - g) * b,
+        clip01=lambda x: smooth_clip(x, 0.0, 1.0, t_clip),
+        max3=max3,
+        eq_gate=lambda x, v: jax.nn.sigmoid(
+            (0.5 - jnp.abs(jnp.asarray(x, jnp.float32) - v)) / t_gate),
+    )

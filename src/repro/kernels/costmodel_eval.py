@@ -20,7 +20,10 @@ through VMEM is optimal -- the kernel's job is to avoid materializing the
 HBM.  VMEM footprint per step: (8 + 3*TB + 4*TB) * TN * 4 B ~= 32 KiB << 16 MiB.
 
 The kernel body calls :func:`repro.costmodel.maestro.core_cost` -- the exact
-ops the ``ref.py`` oracle lowers -- so allclose agreement is structural.
+ops the ``ref.py`` oracle lowers, both running on the shared *hard* plateau-op
+primitives (costmodel/primitives.py) -- so allclose agreement is structural.
+(The soft/differentiable primitives never enter the kernel: Pallas only ever
+lowers the hard path.)
 Validated in interpret mode on CPU (tests/test_kernels.py sweeps shapes and
 dtypes against the oracle).
 """

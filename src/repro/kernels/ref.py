@@ -14,8 +14,10 @@ from repro.costmodel.layers import NUM_FIELDS
 def cost_eval_ref(layers_t, pe, kt, df):
     """Oracle for kernels.costmodel_eval: (NUM_FIELDS, N) x (B, N) -> 4x(B, N).
 
-    Identical math to the kernel (both call maestro.core_cost); this version
-    simply broadcasts without any tiling.
+    Identical math to the kernel: both call maestro.core_cost, which runs on
+    the shared *hard* plateau-op primitives (costmodel/primitives.py) -- the
+    single source of truth for the dataflow-term math.  This version simply
+    broadcasts without any tiling.
     """
     fields = [layers_t[i][None, :] for i in range(NUM_FIELDS)]
     out = maestro.core_cost(*fields, pe, kt, df)

@@ -8,6 +8,10 @@
     PYTHONPATH=src python -m repro.launch.search --workload mnasnet \
         --method sa --epochs 2000
 
+    # One-shot gradient descent through the differentiable cost model:
+    PYTHONPATH=src python -m repro.launch.search --workload ncf \
+        --method relaxed --epochs 200
+
     # Assigned architecture as the search target (LLM serving workload):
     PYTHONPATH=src python -m repro.launch.search --arch qwen3-32b --tokens 512
 
@@ -61,6 +65,13 @@ def build_request(args) -> api.SearchRequest:
     }
     if args.lr is not None:      # unset keeps each method's own default
         options["lr"] = args.lr
+    # Relaxed-engine knobs (ignored by every other method).
+    for k, v in (("steps_per_eval", args.relaxed_steps),
+                 ("restarts", args.relaxed_restarts),
+                 ("tau_start", args.tau_start),
+                 ("tau_min", args.tau_min)):
+        if v is not None:
+            options[k] = v
     if args.method == "fanout":
         # The per-method knobs collected above configure the *inner* method;
         # the fanout layer itself takes the shard/backend flags.
@@ -113,6 +124,17 @@ def main(argv=None):
     ap.add_argument("--ga-population", type=int, default=None,
                     help="default: 20 for the two_stage fine-tuner, "
                     "100 for --method ga")
+    ap.add_argument("--relaxed-steps", type=int, default=None,
+                    help="--method relaxed: gradient steps per hard "
+                    "evaluation (default 25)")
+    ap.add_argument("--relaxed-restarts", type=int, default=None,
+                    help="--method relaxed: parallel descent replicas "
+                    "(default 4)")
+    ap.add_argument("--tau-start", type=float, default=None,
+                    help="--method relaxed: initial surrogate temperature "
+                    "(default 1.0)")
+    ap.add_argument("--tau-min", type=float, default=None,
+                    help="--method relaxed: annealing floor (default 0.05)")
     ap.add_argument("--fanout-backend", default="auto",
                     choices=["auto", "device", "threads", "serial"],
                     help="--method fanout execution backend: one shard per "

@@ -14,6 +14,13 @@ nothing fresh.
 Thread-safe LRU with hit/miss/eviction accounting; all counting happens at
 *unique-row* granularity (the batcher dedupes duplicates inside a dispatch
 before consulting the cache -- see ``CostEvalBatcher``).
+
+Every key is namespaced by a cost-model *version* -- by default the content
+hash of the model's source modules (:func:`repro.costmodel.content_hash`).
+A point row evaluated under one version of the model can therefore never be
+served under another: edit ``maestro.py`` (or its primitives) and every
+cached ``(lat, en, area, pw)`` tuple from the old semantics misses cleanly
+instead of silently poisoning new searches.
 """
 from __future__ import annotations
 
@@ -21,20 +28,32 @@ import threading
 from collections import OrderedDict
 from typing import Dict, Optional
 
+
 import numpy as np
+
+
+def model_version() -> str:
+    """The default cache namespace: the cost model's content hash."""
+    from repro.costmodel import maestro
+
+    return maestro.content_hash()
 
 
 class CostMemoCache:
     """LRU memo of per-point cost evaluations.
 
-    Keys are ``bytes`` (the packed f32 point row); values are ``(4,)``
-    float32 arrays ``[latency, energy, area, power]``.
+    Keys are ``bytes`` (the packed f32 point row), internally prefixed with
+    the model ``version`` tag; values are ``(4,)`` float32 arrays
+    ``[latency, energy, area, power]``.
     """
 
-    def __init__(self, capacity: int = 2 ** 20):
+    def __init__(self, capacity: int = 2 ** 20,
+                 version: Optional[str] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
+        self.version = model_version() if version is None else str(version)
+        self._vprefix = self.version.encode("ascii") + b":"
         self._data: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
@@ -54,8 +73,10 @@ class CostMemoCache:
         """
         values = []
         miss_index = []
+        pre = self._vprefix
         with self._lock:
             for i, k in enumerate(keys):
+                k = pre + k
                 v = self._data.get(k)
                 if v is None:
                     self.misses += 1
@@ -68,8 +89,10 @@ class CostMemoCache:
 
     def put_many(self, keys, vals: np.ndarray) -> None:
         """Insert key->(4,) rows; evicts least-recently-used past capacity."""
+        pre = self._vprefix
         with self._lock:
             for k, v in zip(keys, vals):
+                k = pre + k
                 self._data[k] = v
                 self._data.move_to_end(k)
             while len(self._data) > self.capacity:
@@ -81,11 +104,12 @@ class CostMemoCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, object]:
         with self._lock:
             return {
                 "entries": len(self._data),
                 "capacity": self.capacity,
+                "version": self.version,
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,

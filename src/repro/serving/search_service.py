@@ -9,8 +9,9 @@ and multiplexes them onto shared hardware:
     evaluations through one shared :class:`CostEvalBatcher`, so N users'
     searches produce one fused dispatch stream and share the per-point
     :class:`CostMemoCache` (popular workloads re-evaluate almost nothing);
-  * ``ga`` and ``sa`` run as chunked engines whose per-generation /
-    per-candidate fitness goes through the SAME batcher via a raw-array
+  * ``ga``, ``sa`` and ``relaxed`` run as chunked engines whose
+    per-generation / per-candidate / per-round fitness goes through the
+    SAME batcher via a raw-array
     ``eval_fn`` -- GA populations are the largest eval batches in the
     system, so a whole generation fuses with concurrent traffic and hits
     the memo cache;
@@ -66,12 +67,13 @@ class SearchCancelled(Exception):
 BATCHED_METHODS = ("random", "grid", "bo")
 
 # Chunked engines whose ``eval_fn`` takes already-decoded raw ``(pe, kt,
-# df)`` arrays instead of level genomes: GA populations and SA candidates
-# route through the same batcher (fusion + dedup + memo cache) via
+# df)`` arrays instead of level genomes: GA populations, SA candidates and
+# the relaxed engine's per-round hard probes route through the same batcher
+# (fusion + dedup + memo cache) via
 # :meth:`SearchService._make_raw_eval_fn`.  The RL family keeps its
 # env-in-the-graph engines (the whole search is one XLA program) and
 # multiplexes at chunk granularity only.
-RAW_BATCHED_METHODS = ("ga", "sa")
+RAW_BATCHED_METHODS = ("ga", "sa", "relaxed")
 
 
 @dataclasses.dataclass(frozen=True)

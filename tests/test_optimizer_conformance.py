@@ -36,11 +36,12 @@ CASES = {
     "ppo2": (20, {}),
     "fanout": (100, {"inner": "random", "n_shards": 2, "backend": "serial"}),
     "dist_reinforce": (20, {}),
+    "relaxed": (60, {"steps_per_eval": 5, "restarts": 2}),
 }
 
 # Engines that stream live through on_chunk (cancellation points); the
 # single-shot baselines emit their trace post-hoc instead.
-CHUNKED = ("reinforce", "two_stage", "a2c", "ppo2", "ga", "sa")
+CHUNKED = ("reinforce", "two_stage", "a2c", "ppo2", "ga", "sa", "relaxed")
 
 
 def _req(method, **kw):

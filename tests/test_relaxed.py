@@ -1,0 +1,324 @@
+"""Differentiable cost-model core + relaxed engine tests.
+
+Four layers of guarantees:
+
+  * The *hard* path is bit-identical to the pre-refactor model: golden
+    scalar values recorded before the primitives split, plus exact equality
+    between the kernel oracle and the model core (they share the hard
+    primitives, so this is structural -- the test guards the structure).
+  * The *soft* path is a faithful relaxation: ``jax.grad`` is finite and
+    non-zero everywhere (including on hard plateaus), agrees with finite
+    differences, and converges to the hard values as ``tau -> 0``.
+  * The relaxed engine honors the shared chunked/resumable/injectable
+    contract (the cross-method schema checks live in
+    ``test_optimizer_conformance.py``; here: chunk invariance, eval_fn
+    byte-identity, resume accounting).
+  * The cost cache is versioned on the model content hash: entries written
+    under one model version can never be served under another.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env as env_lib
+from repro.core import relaxed
+from repro.costmodel import dataflows as dfl
+from repro.costmodel import maestro, workloads, layers_to_array
+from repro.costmodel.layers import LayerSpec
+from repro.kernels import ref
+
+ECFG = env_lib.EnvConfig(platform="cloud")
+CONV = LayerSpec.conv(32, 64, 28, 28, 3, 3).as_row()
+DW = LayerSpec.dwconv(192, 28, 28, 3, 3).as_row()
+GEMM = LayerSpec.gemm(128, 256, 512).as_row()
+
+
+# ---------------------------------------------------------------------------
+# Hard path: bit-identity with the pre-refactor model.
+# ---------------------------------------------------------------------------
+# (pe, kt, df) -> (latency, energy, area, power), recorded from the model
+# *before* the primitives refactor.  Exact f32 equality, not allclose: the
+# hard path must stay byte-for-byte the oracle it always was.
+GOLDEN_CONV = {
+    (16.0, 4.0, 0): (778776.0, 69904.8203125, 115200.0, 24.6560001373291),
+    (37.0, 7.0, 1): (524186.09375, 109936.4140625, 199800.0,
+                     51.02300262451172),
+    (128.0, 16.0, 2): (129055.3125, 80536.5390625, 819200.0,
+                       188.03201293945312),
+    (1.0, 1.0, 0): (12460053.0, 391123.375, 4200.0, 1.2710000276565552),
+    (160.0, 12.0, 1): (179744.65625, 86053.25, 1184000.0,
+                       249.44000244140625),
+}
+GOLDEN_DW = {
+    (32.0, 6.0, 0): (36529.65625, 63195.5546875, 294400.0,
+                     55.07200241088867),
+}
+
+
+@pytest.mark.parametrize("point,want", sorted(GOLDEN_CONV.items()))
+def test_hard_path_golden_values_conv(point, want):
+    pe, kt, df = point
+    out = maestro.evaluate(CONV, pe, kt, df)
+    got = (np.float32(out.latency), np.float32(out.energy),
+           np.float32(out.area), np.float32(out.power))
+    assert got == tuple(np.float32(w) for w in want)
+
+
+def test_hard_path_golden_values_dwconv():
+    (pe, kt, df), want = next(iter(GOLDEN_DW.items()))
+    out = maestro.evaluate(DW, pe, kt, df)
+    got = (np.float32(out.latency), np.float32(out.energy),
+           np.float32(out.area), np.float32(out.power))
+    assert got == tuple(np.float32(w) for w in want)
+
+
+def test_kernel_oracle_is_exactly_the_model_core():
+    """ref.cost_eval_ref and maestro.evaluate share the hard primitives --
+    the dedup satellite's guarantee is exact equality, not allclose."""
+    rng = np.random.default_rng(0)
+    arr = layers_to_array(workloads.get_workload("ncf"))
+    N = arr.shape[0]
+    pe = rng.integers(1, 161, (16, N)).astype(np.float32)
+    kt = rng.integers(1, 17, (16, N)).astype(np.float32)
+    df = rng.integers(0, 3, (16, N)).astype(np.float32)
+    lat, en, area, pw = ref.cost_eval_ref(arr.T, pe, kt, df)
+    out = maestro.evaluate(arr[None], pe, kt, df)
+    np.testing.assert_array_equal(np.asarray(lat), np.asarray(out.latency))
+    np.testing.assert_array_equal(np.asarray(en), np.asarray(out.energy))
+    np.testing.assert_array_equal(np.asarray(area), np.asarray(out.area))
+    np.testing.assert_array_equal(np.asarray(pw), np.asarray(out.power))
+
+
+# ---------------------------------------------------------------------------
+# Soft path: finite, non-zero, FD-consistent gradients.
+# ---------------------------------------------------------------------------
+def _onehot(d):
+    return jnp.eye(dfl.NUM_DATAFLOWS, dtype=jnp.float32)[d]
+
+
+def _soft_obj(layer):
+    def obj(pe, kt, w, tau):
+        o = maestro.soft_evaluate(layer, pe, kt, w, tau)
+        return o.latency + o.energy + o.area + o.power
+    return obj
+
+
+@pytest.mark.parametrize("layer", [CONV, DW, GEMM],
+                         ids=["conv", "dwconv", "gemm"])
+@pytest.mark.parametrize("df", [0, 1, 2], ids=dfl.DATAFLOW_NAMES)
+def test_soft_grads_finite_and_nonzero(layer, df):
+    obj = _soft_obj(layer)
+    g = jax.jit(jax.vmap(jax.grad(obj, argnums=(0, 1, 2)),
+                         in_axes=(0, 0, None, None)))
+    pe = jnp.array([1.0, 7.3, 16.0, 80.0, 137.2, 160.0])
+    kt = jnp.array([1.0, 3.5, 8.0, 12.0, 15.5, 16.0])
+    gpe, gkt, gw = g(pe, kt, _onehot(df), 1.0)
+    for arr in (gpe, gkt, gw):
+        assert bool(jnp.all(jnp.isfinite(arr)))
+    # Non-zero everywhere: the whole point of the relaxation.
+    assert bool(jnp.all(jnp.abs(gpe) > 0))
+    assert bool(jnp.all(jnp.abs(gkt) > 0))
+    # The dataflow simplex gets gradient signal too.
+    assert bool(jnp.all(jnp.abs(gw).max(-1) > 0))
+
+
+@pytest.mark.parametrize("layer", [CONV, DW, GEMM],
+                         ids=["conv", "dwconv", "gemm"])
+@pytest.mark.parametrize("df", [0, 1, 2], ids=dfl.DATAFLOW_NAMES)
+def test_soft_grad_matches_finite_differences(layer, df):
+    """Central differences agree with jax.grad on the soft model.
+
+    The soft staircase has regions of high curvature (near cell edges at
+    small kt) where the *FD estimate itself* does not converge in f32 --
+    there the truncation error swamps the comparison, so a point only
+    counts when two step sizes agree with each other (FD has converged);
+    converged points must then match the analytic gradient.  Wrong or
+    zero gradients still fail: most probe points converge.
+    """
+    obj = _soft_obj(layer)
+    w, tau = _onehot(df), 1.0
+    f = jax.jit(lambda pe, kt: obj(pe, kt, w, tau))
+    g = jax.jit(jax.grad(lambda pe, kt: obj(pe, kt, w, tau),
+                         argnums=(0, 1)))
+
+    def fd(fun, x0, h):
+        return float((fun(x0 + h) - fun(x0 - h)) / (2 * h))
+
+    checked = 0
+    for pe, kt in [(9.7, 3.3), (33.4, 8.6), (121.1, 13.9), (64.5, 11.2),
+                   (100.3, 9.6)]:
+        gpe, gkt = g(pe, kt)
+        probes = ((float(gpe), (lambda x: f(x, kt)), pe),
+                  (float(gkt), (lambda x: f(pe, x)), kt))
+        for an, fun, x0 in probes:
+            # h well under the soft staircase's shortest cell (~kt^2/K) so
+            # truncation can actually vanish.
+            h2 = 0.005
+            fd1 = fd(fun, x0, 0.02)
+            fd2 = fd(fun, x0, h2)
+            # f32 FD cannot resolve gradients below the cancellation noise
+            # floor ~ eps*|f|/(2h); fold it into the comparison scale.
+            noise = 64 * np.finfo(np.float32).eps * \
+                max(abs(float(fun(x0))), 1.0) / (2 * h2)
+            scale = max(abs(an), abs(fd2), noise)
+            if abs(fd1 - fd2) / scale > 0.05:
+                continue                   # FD itself not converged here
+            checked += 1
+            assert abs(an - fd2) / scale < 0.15, (pe, kt, an, fd1, fd2)
+    assert checked >= 4                    # most probe points do converge
+
+
+@pytest.mark.parametrize("scenario", ["LP", "LS"])
+def test_soft_model_cost_grads_both_scenarios(scenario):
+    """Whole-model aggregation stays differentiable in both deployment
+    scenarios; under LS the smooth max routes constraint gradient to every
+    layer, not just the argmax layer."""
+    arr = layers_to_array(workloads.get_workload("ncf"))
+    N = arr.shape[0]
+    w = jnp.tile(_onehot(0), (N, 1))
+
+    def agg(pe, kt):
+        mc = maestro.soft_model_cost(arr, pe, kt, w, 0.5, scenario)
+        return mc.latency + mc.area
+    g = jax.jit(jax.grad(agg, argnums=(0, 1)))
+    gpe, gkt = g(jnp.full((N,), 16.0), jnp.full((N,), 4.0))
+    assert bool(jnp.all(jnp.isfinite(gpe)) and jnp.all(jnp.isfinite(gkt)))
+    assert bool(jnp.all(jnp.abs(gpe) > 0) and jnp.all(jnp.abs(gkt) > 0))
+
+
+def test_soft_grad_nonzero_on_hard_plateau():
+    """kt > K_out over-provisions the buffer without changing the hard
+    latency (min(kt, K_out) plateau): hard grad is exactly 0, soft isn't."""
+    layer = LayerSpec.conv(8, 64, 28, 28, 3, 3).as_row()   # K_out = 8
+
+    def lat(model, kt, tau=None):
+        if model == "hard":
+            return maestro.evaluate(layer, 16.0, kt, 0).latency
+        return maestro.soft_evaluate(layer, 16.0, kt, _onehot(0), tau).latency
+
+    hard_g = jax.grad(lambda kt: lat("hard", kt))(9.0)
+    assert float(hard_g) == 0.0
+    for kt in (9.0, 12.0):
+        soft_g = jax.grad(lambda kt: lat("soft", kt, 1.0))(kt)
+        assert bool(jnp.isfinite(soft_g)) and float(soft_g) != 0.0
+
+
+def test_soft_converges_to_hard_as_tau_shrinks():
+    """At the integer points the engines actually round to, the soft model's
+    values approach the hard model's as tau anneals toward 0."""
+    rng = np.random.default_rng(3)
+    arr = layers_to_array(workloads.get_workload("ncf"))
+    N = arr.shape[0]
+    pe = rng.integers(1, 161, (8, N)).astype(np.float32)
+    kt = rng.integers(1, 17, (8, N)).astype(np.float32)
+    df = rng.integers(0, 3, (8, N))
+    w = jnp.eye(dfl.NUM_DATAFLOWS, dtype=jnp.float32)[df]
+    hard = maestro.evaluate(arr[None], pe, kt, df.astype(np.float32))
+    errs = []
+    for tau in (1.0, 0.3, 0.05):
+        soft = maestro.soft_evaluate(arr[None], jnp.asarray(pe),
+                                     jnp.asarray(kt), w, tau)
+        rel = np.abs(np.asarray(soft.latency) - np.asarray(hard.latency)) \
+            / np.maximum(np.asarray(hard.latency), 1.0)
+        errs.append(float(np.median(rel)))
+    assert errs[-1] < errs[0]
+    assert errs[-1] < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Relaxed engine: chunked/resumable/injectable contract.
+# ---------------------------------------------------------------------------
+CFG = relaxed.RelaxedConfig(steps_per_eval=5, restarts=2, seed=7)
+
+
+@pytest.fixture(scope="module")
+def ncf_env():
+    wl = workloads.get_workload("ncf")
+    return wl, env_lib.make_env(wl, ECFG)
+
+
+def test_relaxed_chunk_boundaries_never_change_bytes(ncf_env):
+    wl, env = ncf_env
+    _, h1 = relaxed.run_relaxed_search(wl, ECFG, 30, CFG, env=env)
+    s3, h3 = relaxed.run_relaxed_search(wl, ECFG, 30, CFG, chunk=7, env=env)
+    assert h1.tobytes() == h3.tobytes()
+    assert h1.shape == (30,)
+    assert int(s3.evals) == 30
+
+
+def test_relaxed_eval_fn_injection_is_byte_identical(ncf_env):
+    wl, env = ncf_env
+    calls = []
+
+    @jax.jit
+    def _fit(pe, kt, df):
+        perf, cons, feas = env_lib.genome_cost(env, ECFG, pe, kt, df)
+        return jnp.where(feas, perf, jnp.inf)
+
+    def eval_fn(pe, kt, df):
+        calls.append(pe.shape)
+        return np.asarray(_fit(jnp.asarray(pe[0]), jnp.asarray(kt[0]),
+                               df))[None]
+
+    _, h1 = relaxed.run_relaxed_search(wl, ECFG, 25, CFG, env=env)
+    _, h2 = relaxed.run_relaxed_search(wl, ECFG, 25, CFG, eval_fn=eval_fn,
+                                       env=env)
+    assert h1.tobytes() == h2.tobytes()
+    assert len(calls) == 25            # eps counts hard evals, exactly
+
+
+def test_relaxed_resume_continues_the_trajectory(ncf_env):
+    wl, env = ncf_env
+    sa, ha = relaxed.run_relaxed_search(wl, ECFG, 15, CFG, env=env)
+    sb, hb = relaxed.run_relaxed_search(wl, ECFG, 15, CFG, state=sa, env=env)
+    assert int(sb.evals) == 30
+    assert int(sb.gstep) > int(sa.gstep)
+    assert float(sb.best_fit) <= float(sa.best_fit)
+    assert ha.shape == hb.shape == (15,)
+
+
+def test_relaxed_finds_feasible_point_and_respects_budget(ncf_env):
+    wl, env = ncf_env
+    state, hist = relaxed.run_relaxed_search(wl, ECFG, 40, CFG, env=env)
+    assert np.isfinite(float(state.best_fit))
+    pe, kt, df = relaxed.relaxed_solution(state)
+    perf, cons, feas = env_lib.genome_cost(
+        env, ECFG, jnp.asarray(pe), jnp.asarray(kt), jnp.asarray(df))
+    assert bool(feas)
+    assert float(perf) == pytest.approx(float(state.best_fit))
+    # Rounded assignments live inside the fine search bounds.
+    assert np.all((pe >= dfl.PE_MIN) & (pe <= dfl.PE_MAX))
+    assert np.all((kt >= dfl.KT_MIN) & (kt <= dfl.KT_MAX))
+    assert np.all(pe == np.round(pe)) and np.all(kt == np.round(kt))
+
+
+# ---------------------------------------------------------------------------
+# Cache versioning on the model content hash.
+# ---------------------------------------------------------------------------
+def test_cost_cache_is_versioned_on_model_hash():
+    from repro.serving.cost_cache import CostMemoCache
+
+    key = np.arange(11, dtype=np.float32).tobytes()
+    val = np.ones(4, np.float32)
+    c_default = CostMemoCache()
+    assert c_default.version == maestro.content_hash()
+
+    old = CostMemoCache(version="old-model")
+    old.put_many([key], [val])
+    hit, miss = old.get_many([key])
+    assert miss == [] and hit[0] is val
+
+    # Same raw key under a different model version: a clean miss, never a
+    # stale tuple from the old semantics.
+    new = CostMemoCache(version="new-model")
+    new._data = old._data          # simulate a shared/persistent store
+    vals, miss = new.get_many([key])
+    assert miss == [0] and vals[0] is None
+
+
+def test_content_hash_is_stable_and_source_sensitive():
+    h1 = maestro.content_hash()
+    assert h1 == maestro.content_hash()
+    assert len(h1) == 16
+    assert all(c in "0123456789abcdef" for c in h1)
