@@ -27,6 +27,7 @@ BENCHES = [
     ("fig6_critic", "benchmarks.bench_fig6_critic"),
     ("fig7_convergence", "benchmarks.bench_fig7_convergence"),
     ("relaxed_oneshot", "benchmarks.bench_relaxed_oneshot"),
+    ("frontier", "benchmarks.bench_frontier"),
     ("costmodel_throughput", "benchmarks.bench_costmodel_throughput"),
     ("dist_search", "benchmarks.bench_dist_search"),
     ("fanout_backends", "benchmarks.bench_fanout_backends"),

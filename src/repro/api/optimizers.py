@@ -19,6 +19,7 @@ from repro.api.types import SearchOutcome, SearchRequest, Trial
 from repro.core import baselines
 from repro.core import env as env_lib
 from repro.core import ga as ga_lib
+from repro.core import nsga2 as nsga2_lib
 from repro.core import policy as policy_lib
 from repro.core import reinforce
 from repro.core import relaxed as relaxed_lib
@@ -178,6 +179,82 @@ class GeneticAlgorithmOptimizer:
                         extras={"generations": cfg.generations,
                                 "population": cfg.population},
                         streamed=request.on_progress is not None)
+
+
+def _nsga2_cfg(request: SearchRequest) -> nsga2_lib.NSGA2Config:
+    opts = request.options
+    pop = int(opts.get("population", 64))
+    gens = int(opts.get("generations", 0)) or max(request.eps // pop, 1)
+    return nsga2_lib.NSGA2Config(
+        population=pop, generations=gens,
+        mutation_rate=opts.get("mutation_rate", 0.05),
+        crossover_rate=opts.get("crossover_rate", 0.5),
+        archive=int(opts.get("archive", 128)),
+        seed=request.seed, use_kernel=opts.get("use_kernel"))
+
+
+@register("nsga2", aliases=("pareto", "moo"))
+class NSGA2Optimizer:
+    """Constrained multi-objective NSGA-II over (latency, energy).
+
+    Chunked like GA: ``eps`` buys population * generations evaluations, the
+    generation scan runs in ``progress_every``-sized chunks when a callback
+    is set, and an injected ``eval_fn(pe, kt, df) -> (P, 4) costs`` routes
+    whole populations through the search service's cross-request batcher --
+    byte-identical outcomes either way.
+
+    ``best_value``/``history`` follow the unified single-objective contract
+    (the env's primary objective, feasible points only); the trade-off
+    curve lands in ``SearchOutcome.frontier`` and its per-chunk snapshots
+    in ``extras["frontier_trace"]``.
+    """
+
+    name = "nsga2"
+
+    def run(self, request: SearchRequest) -> SearchOutcome:
+        t0 = time.time()
+        cfg = _nsga2_cfg(request)
+        wl = request.resolve_workload()
+        env = env_lib.make_env(wl, request.env)
+        trace_snapshots = []
+        user_cb = request.on_progress
+
+        def on_chunk(state, hist, gens_done):
+            trace_snapshots.append(nsga2_lib.frontier_points(state))
+            if user_cb is not None:
+                user_cb(Trial(
+                    min(gens_done * cfg.population, request.eps),
+                    float(np.min(hist)), float(state.best_val)))
+
+        chunk = (max(request.progress_every // cfg.population, 1)
+                 if user_cb is not None else None)
+        eval_fn = request.options.get("eval_fn")
+        if eval_fn is None:
+            # Serial runs evaluate through the same flat per-point +
+            # standalone-aggregation programs the service's batcher
+            # dispatches: byte-identical outcomes by construction (the
+            # in-graph scan fitness fuses the f32 reductions differently
+            # and drifts an ulp on some workloads).
+            from repro.serving import batcher as batcher_lib
+
+            eval_fn = batcher_lib.make_local_costs_eval(
+                env, request.env, use_kernel=cfg.use_kernel)
+        state, hist = nsga2_lib.run_nsga2_search(
+            wl, request.env, cfg, chunk=chunk, on_chunk=on_chunk,
+            eval_fn=eval_fn, env=env)
+        pe, kt, df = nsga2_lib.nsga2_solution(env, request.env, state)
+        trace = types.expand_trace(hist, cfg.population)
+        frontier = nsga2_lib.nsga2_frontier(env, request.env, state)
+        return _outcome(request, self.name, float(state.best_val),
+                        np.asarray(pe), np.asarray(kt), np.asarray(df),
+                        trace, t0,
+                        extras={"generations": cfg.generations,
+                                "population": cfg.population,
+                                "archive": cfg.archive,
+                                "frontier_size": len(frontier["lat"]),
+                                "frontier_trace": trace_snapshots},
+                        streamed=user_cb is not None,
+                        frontier=frontier)
 
 
 @register("relaxed", aliases=("oneshot", "gradient"))

@@ -5,6 +5,12 @@ protocol and decorate the class with ``@register("name")``.  Built-in
 adapters live in :mod:`repro.api.optimizers`; the distributed wrappers
 register themselves from :mod:`repro.distributed.dist_search`.  Both are
 imported lazily on first lookup so ``repro.api`` stays cheap to import.
+
+Every name returns the same :class:`SearchOutcome` schema; multi-objective
+engines (``nsga2``) additionally fill ``SearchOutcome.frontier``.  The
+conformance suite (tests/test_optimizer_conformance.py) runs the whole
+registry against the contract -- including the registry-wide guarantee
+that a reported best is feasible under the platform budget.
 """
 from __future__ import annotations
 

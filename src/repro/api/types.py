@@ -103,6 +103,14 @@ class SearchOutcome:
     non-increasing, +inf while nothing feasible has been seen (the paper's
     "NAN").  pe/kt/df are the per-layer raw assignment of the best solution
     (NaN-filled when the method never found a feasible point).
+
+    frontier is optional (multi-objective engines only, today ``nsga2``):
+    the final Pareto-frontier of feasible designs as a dict of arrays
+    sorted by latency -- ``lat``/``en``/``area``/``pw`` of shape (F,) plus
+    the realizing per-layer ``pe``/``kt``/``df`` of shape (F, N); every
+    point is mutually non-dominating on (lat, en) and satisfies the
+    platform budget.  Chunk-by-chunk frontier snapshots ride in
+    ``extras["frontier_trace"]`` (list of (F_i, 4) cost arrays).
     """
 
     method: str
@@ -117,6 +125,7 @@ class SearchOutcome:
     wall_seconds: float
     feasible: bool
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    frontier: Optional[Dict[str, np.ndarray]] = None
 
 
 def samples_to_convergence(trace: np.ndarray, tol: float = 0.05) -> int:
@@ -165,12 +174,14 @@ def fit_trace(trace, eps: int) -> np.ndarray:
 
 def build_outcome(request: SearchRequest, method: str, best_value, pe, kt,
                   df, trace, t0: float, extras=None,
-                  streamed: bool = False) -> SearchOutcome:
+                  streamed: bool = False,
+                  frontier=None) -> SearchOutcome:
     """Normalize a finished run into the unified schema.
 
     ``pe``/``kt`` may be None (nothing feasible found -> NaN-filled arrays);
     ``df`` may be None (fixed-dataflow method -> the env's dataflow id).
-    ``t0`` is the run's start time (``time.time()``).
+    ``t0`` is the run's start time (``time.time()``).  ``frontier`` is the
+    optional Pareto-frontier dict of a multi-objective engine.
     """
     best_value = float(best_value)
     N = request.num_layers
@@ -190,7 +201,7 @@ def build_outcome(request: SearchRequest, method: str, best_value, pe, kt,
         samples_to_convergence=samples_to_convergence(history),
         wall_seconds=time.time() - t0,
         feasible=bool(np.isfinite(best_value)),
-        extras=dict(extras or {}))
+        extras=dict(extras or {}), frontier=frontier)
 
 
 def emit_trace(request: SearchRequest, history: np.ndarray) -> None:

@@ -33,7 +33,12 @@ PLATFORM_FRACTIONS = {
     "iotx": 0.05,
 }
 
-OBJECTIVES = ("latency", "energy")
+# "blend" is the scalarization objective for frontier sweeps: the whole-
+# model value is total_lat**w * total_en**(1-w) (w = EnvConfig.blend_weight),
+# i.e. a weighted sum in log space, so any single-objective engine can walk
+# the latency/energy trade-off one weight at a time.  It is whole-model only:
+# the per-layer RL reward path (``layer_cost``) rejects it.
+OBJECTIVES = ("latency", "energy", "blend")
 CONSTRAINTS = ("area", "power")
 
 
@@ -48,12 +53,14 @@ class EnvConfig:
     dataflow: int = dfl.DLA    # ignored when mix=True
     mix: bool = False
     levels: int = 12
+    blend_weight: float = 0.5  # only read when objective == "blend"
 
     def __post_init__(self):
         assert self.objective in OBJECTIVES
         assert self.constraint in CONSTRAINTS
         assert self.platform in PLATFORM_FRACTIONS
         assert self.scenario in ("LP", "LS")
+        assert 0.0 <= self.blend_weight <= 1.0
 
     @property
     def obs_dim(self) -> int:
@@ -115,30 +122,62 @@ def make_env(workload, cfg: EnvConfig) -> EnvArrays:
 
 def layer_cost(env: EnvArrays, cfg: EnvConfig, t, pe, kt, df):
     """Per-layer (objective value, constraint consumption) at step t."""
+    if cfg.objective == "blend":
+        raise ValueError(
+            "objective='blend' is a whole-model scalarization; the per-layer"
+            " RL reward path cannot decompose it per step -- use a"
+            " population/sampling method (random/grid/sa/ga/bo/relaxed) or"
+            " the native multi-objective engine (nsga2) instead")
     out = maestro.evaluate(env.layers[t], pe, kt, df)
     perf = out.latency if cfg.objective == "latency" else out.energy
     cons = out.area if cfg.constraint == "area" else out.power
     return perf, cons
 
 
+def select_objective(total_lat, total_en, cfg: EnvConfig):
+    """Whole-model objective from the aggregated (latency, energy) pair."""
+    if cfg.objective == "latency":
+        return total_lat
+    if cfg.objective == "energy":
+        return total_en
+    w = jnp.float32(cfg.blend_weight)
+    return total_lat ** w * total_en ** (jnp.float32(1.0) - w)
+
+
+def aggregate_costs_multi(lat, en, area, pw, cfg: EnvConfig, budget):
+    """Per-layer costs (..., N) -> whole-model
+    (total_lat, total_en, total_area, total_pw, feasible).
+
+    THE one definition of the aggregation semantics -- objectives summed
+    over layers, constraints summed (LP: one partition per layer) or maxed
+    (LS: one shared design), feasible iff the configured constraint metric
+    fits the platform budget -- shared by :func:`genome_cost`, the GA's
+    Pallas-kernel fitness path, the NSGA-II engine and the serving batcher,
+    so none of them can drift apart.  ``aggregate_costs`` below is the
+    scalar-objective view of this same definition.
+    """
+    total_lat = jnp.sum(lat, axis=-1)
+    total_en = jnp.sum(en, axis=-1)
+    if cfg.scenario == "LP":
+        total_area = jnp.sum(area, axis=-1)
+        total_pw = jnp.sum(pw, axis=-1)
+    else:
+        total_area = jnp.max(area, axis=-1)
+        total_pw = jnp.max(pw, axis=-1)
+    total_cons = total_area if cfg.constraint == "area" else total_pw
+    return total_lat, total_en, total_area, total_pw, total_cons <= budget
+
+
 def aggregate_costs(lat, en, area, pw, cfg: EnvConfig, budget):
     """Per-layer costs (..., N) -> whole-model (objective, constraint,
-    feasible).
-
-    THE one definition of the aggregation semantics -- objective summed
-    over layers, constraint summed (LP: one partition per layer) or maxed
-    (LS: one shared design) -- shared by :func:`genome_cost`, the GA's
-    Pallas-kernel fitness path and the serving batcher, so the three can
-    never drift apart.
-    """
-    perf_l = lat if cfg.objective == "latency" else en
-    cons_l = area if cfg.constraint == "area" else pw
-    total_perf = jnp.sum(perf_l, axis=-1)
-    if cfg.scenario == "LP":
-        total_cons = jnp.sum(cons_l, axis=-1)
-    else:
-        total_cons = jnp.max(cons_l, axis=-1)
-    return total_perf, total_cons, total_cons <= budget
+    feasible): the single-objective view of :func:`aggregate_costs_multi`
+    (bit-identical to the pre-frontier definition -- the same jnp
+    reductions over the same arrays; XLA prunes the unselected metric)."""
+    tl, te, ta, tp, feas = aggregate_costs_multi(lat, en, area, pw, cfg,
+                                                 budget)
+    total_perf = select_objective(tl, te, cfg)
+    total_cons = ta if cfg.constraint == "area" else tp
+    return total_perf, total_cons, feas
 
 
 def genome_cost(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
@@ -150,6 +189,27 @@ def genome_cost(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
     out = maestro.evaluate(env.layers, pe, kt, df)
     return aggregate_costs(out.latency, out.energy, out.area, out.power,
                            cfg, env.budget)
+
+
+def genome_costs_multi(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
+    """Whole-model (total_lat, total_en, total_area, total_pw, feasible)
+    for per-layer arrays -- the multi-objective sibling of
+    :func:`genome_cost` (same model eval, same reductions)."""
+    out = maestro.evaluate(env.layers, pe, kt, df)
+    return aggregate_costs_multi(out.latency, out.energy, out.area,
+                                 out.power, cfg, env.budget)
+
+
+def feasibility_mask(env: EnvArrays, cfg: EnvConfig, pe, kt, df):
+    """First-class feasibility of per-layer assignments: (...,) bool True
+    where the aggregated platform constraint (Table II) fits the budget.
+
+    This is the mask every optimizer's reported ``best`` must satisfy
+    (enforced registry-wide by tests/test_optimizer_conformance.py):
+    infeasible candidates are never reported as best, they surface only as
+    the paper's "NAN" (best_value = +inf, feasible=False).
+    """
+    return genome_costs_multi(env, cfg, pe, kt, df)[4]
 
 
 def action_tables(cfg: EnvConfig) -> Sequence[np.ndarray]:

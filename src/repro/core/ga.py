@@ -186,11 +186,18 @@ def make_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
     return GAEngine(init_carry, gen_step, decode, fitness, evolve)
 
 
-def _run_chunked_ga(env, ecfg, engine: GAEngine, state: GAState,
-                    generations: int, chunk: Optional[int], on_chunk,
-                    eval_fn, mix_df: bool, raw_genome: bool = False,
-                    fixed_df=None):
-    """Shared chunk driver for both GAs.  Returns (state, (gens,) history).
+def run_chunked_engine(env, ecfg, engine: GAEngine, state,
+                       generations: int, chunk: Optional[int], on_chunk,
+                       eval_fn, mix_df: bool, raw_genome: bool = False,
+                       fixed_df=None):
+    """Shared chunk driver for every population engine.  Returns
+    (state, (gens,) history).
+
+    Drives both GAs here and the NSGA-II engine in ``core/nsga2.py``: any
+    engine whose state leads with a ``pop`` field of candidates awaiting
+    evaluation and whose ``evolve(state, fit)`` consumes their fitness
+    (scalar (P,) or multi-objective (P, 4)) gets chunking, resume,
+    cancellation and eval_fn injection from this one loop.
 
     ``eval_fn=None`` scans ``gen_step`` in jitted chunks (fitness stays in
     the XLA program); with ``eval_fn(pe, kt, df) -> (P,) fitness`` each
@@ -274,8 +281,8 @@ def run_ga_search(workload, ecfg: env_lib.EnvConfig,
     engine = make_ga_engine(env, ecfg, cfg)
     if state is None:
         state = engine.init_carry(cfg.seed)
-    return _run_chunked_ga(env, ecfg, engine, state, cfg.generations,
-                           chunk, on_chunk, eval_fn, mix_df=ecfg.mix)
+    return run_chunked_engine(env, ecfg, engine, state, cfg.generations,
+                              chunk, on_chunk, eval_fn, mix_df=ecfg.mix)
 
 
 def ga_solution(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
@@ -389,9 +396,9 @@ def run_local_ga(workload, ecfg: env_lib.EnvConfig,
     if state is None:
         state = engine.init_carry(cfg.seed)
     fixed_df = np.asarray(init_df, np.float32) if eval_fn is not None else None
-    return _run_chunked_ga(env, ecfg, engine, state, cfg.generations,
-                           chunk, on_chunk, eval_fn, mix_df=False,
-                           raw_genome=True, fixed_df=fixed_df)
+    return run_chunked_engine(env, ecfg, engine, state, cfg.generations,
+                              chunk, on_chunk, eval_fn, mix_df=False,
+                              raw_genome=True, fixed_df=fixed_df)
 
 
 def local_ga(workload, ecfg: env_lib.EnvConfig,

@@ -166,3 +166,46 @@ def heuristic_b(workload, ecfg: env_lib.EnvConfig) -> Dict[str, Any]:
     i = int(fit.argmin())
     return {"value": float(fit[i]), "pe": np.asarray(pe[i]),
             "kt": np.asarray(kt[i])}
+
+
+def scalarized_frontier_sweep(workload, ecfg: env_lib.EnvConfig,
+                              eps: int, weights=(0.0, 0.25, 0.5, 0.75, 1.0),
+                              method: str = "ga", seed: int = 0,
+                              options: Optional[Dict[str, Any]] = None):
+    """Approximate the latency-energy frontier with k scalarized searches.
+
+    The classic alternative to native multi-objective search: split the
+    eval budget across ``len(weights)`` single-objective runs, each
+    minimizing the blended objective ``lat^w * en^(1-w)`` (a weighted sum
+    in log space -- every minimizer is Pareto-optimal), and collect the
+    feasible (lat, en, area, pw) points the winners realize.  Any
+    single-objective registry method works; this is the baseline
+    ``benchmarks/bench_frontier.py`` pits NSGA-II against at equal budget.
+
+    Returns ``{"points": (k', 4) array, "weights", "outcomes"}`` with one
+    row per *feasible* winner (k' <= k).
+    """
+    from repro import api   # lazy: api itself imports this module
+
+    if isinstance(workload, str):
+        workload = workloads_lib.get_workload(workload)
+    env = env_lib.make_env(workload, ecfg)
+    per_run = max(eps // len(weights), 1)
+    points, outcomes = [], []
+    for w in weights:
+        wcfg = dataclasses.replace(ecfg, objective="blend", blend_weight=w)
+        out = api.run_search(api.SearchRequest(
+            workload=workload, env=wcfg, eps=per_run, seed=seed,
+            method=method, options=dict(options or {})))
+        outcomes.append(out)
+        if not out.feasible:
+            continue
+        tl, te, ta, tp, feas = env_lib.genome_costs_multi(
+            env, wcfg, jnp.asarray(out.pe, jnp.float32),
+            jnp.asarray(out.kt, jnp.float32),
+            jnp.asarray(out.df))
+        if bool(feas):
+            points.append([float(tl), float(te), float(ta), float(tp)])
+    pts = (np.asarray(points, np.float64) if points
+           else np.empty((0, 4), np.float64))
+    return {"points": pts, "weights": list(weights), "outcomes": outcomes}

@@ -177,10 +177,45 @@ _PAPER_WORKLOADS: Dict[str, Callable[..., List[LayerSpec]]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Multi-DNN co-design: one HW assignment against a mix of models.
+# ---------------------------------------------------------------------------
+def multi_dnn(names: List[str] = None, tokens: int = 32) -> List[LayerSpec]:
+    """Concatenate several models into one workload (the co-design mix).
+
+    The paper searches per "DNN(s) of interest"; this lowers a *set* of
+    them -- by default every assigned architecture config in
+    ``repro.configs`` -- into one layer list, so one search assigns
+    resources that must serve the whole mix (each member's layers keep
+    their own per-layer (PE, Buf) slots; under LP they share one chip
+    budget, under LS one shared design).  Layer counts are ragged across
+    members, which is exactly what stresses the multi-workload Pallas path
+    (``ops.batched_cost_multi``) through the serving batcher.
+    """
+    from repro.costmodel import arch_workloads
+
+    if names is None:
+        names = arch_workloads.arch_names()
+    import dataclasses
+
+    out: List[LayerSpec] = []
+    for n in names:
+        if n in _PAPER_WORKLOADS:
+            layers = _PAPER_WORKLOADS[n]()
+        else:
+            layers = arch_workloads.lower_arch(n, tokens=tokens)
+        out.extend(dataclasses.replace(l, name=f"{n}.{l.name}")
+                   for l in layers)
+    return out
+
+
 def get_workload(name: str, **kwargs) -> List[LayerSpec]:
-    """Look up a workload by name (paper models + assigned architectures)."""
+    """Look up a workload by name (paper models + assigned architectures +
+    the ``multi_dnn`` co-design mix)."""
     if name in _PAPER_WORKLOADS:
         return _PAPER_WORKLOADS[name](**kwargs)
+    if name == "multi_dnn":
+        return multi_dnn(**kwargs)
     # Assigned architectures are lowered from their configs.
     from repro.costmodel import arch_workloads
 

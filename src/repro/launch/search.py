@@ -51,9 +51,11 @@ def build_request(args) -> api.SearchRequest:
         platform=args.platform, scenario=args.scenario,
         dataflow=(dfl.DLA if mix
                   else dfl.DATAFLOW_NAMES.index(args.dataflow)),
-        mix=mix, levels=args.levels)
+        mix=mix, levels=args.levels,
+        blend_weight=args.blend_weight)
     # GA flags feed both the two_stage fine-tuner (nested "ga" dict) and
-    # --method ga (top-level keys); unset flags keep each method's defaults.
+    # --method ga / nsga2 (top-level keys); unset flags keep each method's
+    # defaults.
     ga_opts = {k: v for k, v in (("population", args.ga_population),
                                  ("generations", args.ga_generations))
                if v is not None}
@@ -63,6 +65,8 @@ def build_request(args) -> api.SearchRequest:
         "ga": ga_opts,
         **ga_opts,
     }
+    if args.archive is not None:
+        options["archive"] = args.archive
     if args.lr is not None:      # unset keeps each method's own default
         options["lr"] = args.lr
     # Relaxed-engine knobs (ignored by every other method).
@@ -99,7 +103,15 @@ def main(argv=None):
                     help="search method from the unified registry "
                     f"(one of {', '.join(api.list_optimizers())})")
     ap.add_argument("--objective", default="latency",
-                    choices=["latency", "energy"])
+                    choices=["latency", "energy", "blend"],
+                    help="whole-model objective; 'blend' scalarizes "
+                    "lat^w * en^(1-w) with --blend-weight (sampling "
+                    "methods only)")
+    ap.add_argument("--blend-weight", type=float, default=0.5,
+                    help="--objective blend: latency weight w in [0, 1]")
+    ap.add_argument("--archive", type=int, default=None,
+                    help="--method nsga2: Pareto-archive capacity "
+                    "(default 128)")
     ap.add_argument("--constraint", default="area",
                     choices=["area", "power"])
     ap.add_argument("--platform", default="iot",
@@ -195,6 +207,12 @@ def main(argv=None):
         "samples_to_convergence": out.samples_to_convergence,
         "wall_seconds": round(out.wall_seconds, 2),
     }
+    if out.frontier is not None:
+        # Multi-objective methods: the latency-energy trade-off curve.
+        rec["frontier"] = {
+            k: np.asarray(v).tolist()
+            for k, v in out.frontier.items() if k not in ("pe", "kt", "df")}
+        rec["frontier_size"] = len(out.frontier["lat"])
     if out.feasible:
         rec["assignment"] = {
             "pe": np.asarray(out.pe).astype(int).tolist(),

@@ -65,6 +65,23 @@ def _agg_fn(ecfg: "env_lib.EnvConfig"):
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _agg_multi_fn(ecfg: "env_lib.EnvConfig"):
+    """Jitted (b, N, 4) -> (b, 4) aggregated (lat, en, area, pw): the SAME
+    ``env.aggregate_costs_multi`` reduction the NSGA-II in-graph fitness
+    runs, over the same (b, N) shape -- batched multi-objective results
+    stay bit-identical to serial ones."""
+
+    @jax.jit
+    def f(vals, budget):
+        tl, te, ta, tp, _ = env_lib.aggregate_costs_multi(
+            vals[..., 0], vals[..., 1], vals[..., 2], vals[..., 3],
+            ecfg, budget)
+        return jnp.stack([tl, te, ta, tp], axis=-1)
+
+    return f
+
+
 @jax.jit
 def _flat_cost(layers, pe, kt, df):
     """(M, NUM_FIELDS) x (M,) -> (M, 4) point costs via the jnp oracle."""
@@ -82,14 +99,15 @@ def _next_pow2(n: int, lo: int = 256) -> int:
 class _Item:
     """One in-flight eval request: points + how to aggregate them."""
 
-    __slots__ = ("points", "shape", "agg_key", "budget", "event", "fit",
-                 "error")
+    __slots__ = ("points", "shape", "agg_key", "budget", "multi", "event",
+                 "fit", "error")
 
-    def __init__(self, points, shape, agg_key, budget):
+    def __init__(self, points, shape, agg_key, budget, multi=False):
         self.points = points          # (b*N, ROW_WIDTH) f32
         self.shape = shape            # (b, N)
         self.agg_key = agg_key        # the request's EnvConfig (hashable)
         self.budget = budget          # f32 scalar
+        self.multi = multi            # (b, 4) aggregated costs vs (b,) fit
         self.event = threading.Event()
         self.fit: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
@@ -150,20 +168,24 @@ class CostEvalBatcher:
         budget.  Returns (b,) f32 fitness (+inf = infeasible), bit-identical
         to ``_decode_and_eval`` on the same genomes.
         """
+        return self._submit(layers, pe, kt, df, ecfg, budget, multi=False)
+
+    def evaluate_costs(self, layers, pe, kt, df, ecfg, budget) -> np.ndarray:
+        """Like :meth:`evaluate` but returns (b, 4) aggregated whole-model
+        (lat, en, area, pw) costs instead of scalar fitness -- the eval hook
+        of the multi-objective ``nsga2`` engine.  Bit-identical to the
+        engine's in-graph ``fitness`` on the same genomes; shares the same
+        per-point dedup, memo cache and fused dispatch as everything else.
+        """
+        return self._submit(layers, pe, kt, df, ecfg, budget, multi=True)
+
+    def _submit(self, layers, pe, kt, df, ecfg, budget,
+                multi: bool) -> np.ndarray:
         if self._closed:
             raise RuntimeError("CostEvalBatcher is closed")
-        layers = np.asarray(layers, np.float32)
         pe = np.asarray(pe, np.float32)
-        b, N = pe.shape
-        kt = np.broadcast_to(np.asarray(kt, np.float32), (b, N))
-        df = np.broadcast_to(np.asarray(df, np.float32), (b, N))
-        points = np.empty((b * N, ROW_WIDTH), np.float32)
-        points[:, :NUM_FIELDS] = np.broadcast_to(
-            layers, (b, N, NUM_FIELDS)).reshape(-1, NUM_FIELDS)
-        points[:, _PE_COL] = pe.ravel()
-        points[:, _KT_COL] = kt.ravel()
-        points[:, _DF_COL] = df.ravel()
-        item = _Item(points, (b, N), ecfg, np.float32(budget))
+        points = pack_point_rows(layers, pe, kt, df)
+        item = _Item(points, pe.shape, ecfg, np.float32(budget), multi=multi)
         with self._cv:
             if self._closed:
                 raise RuntimeError("CostEvalBatcher is closed")
@@ -250,35 +272,89 @@ class CostEvalBatcher:
             n = it.points.shape[0]
             vals = per_point[off:off + n].reshape(it.shape + (4,))
             off += n
-            fit = _agg_fn(it.agg_key)(jnp.asarray(vals), it.budget)
-            it.fit = np.asarray(fit)
+            agg = _agg_multi_fn(it.agg_key) if it.multi else _agg_fn(
+                it.agg_key)
+            it.fit = np.asarray(agg(jnp.asarray(vals), it.budget))
             it.event.set()
 
     def _eval_points(self, rows: np.ndarray) -> np.ndarray:
-        """Evaluate (M, ROW_WIDTH) fresh points -> (M, 4) f32 costs."""
-        M = rows.shape[0]
-        if self._use_kernel:
-            from repro.kernels import ops
+        return eval_point_rows(rows, self._use_kernel)
 
-            # Tile the flat point list into the kernel's (B', TN) lanes.
-            from repro.kernels.costmodel_eval import TN
-            Mp = -(-M // TN) * TN
-            pad = np.ones((Mp - M, ROW_WIDTH), np.float32)
-            pad[:, NUM_FIELDS - 1] = 0.0            # repeat=0: benign rows
-            rp = np.concatenate([rows, pad], axis=0) if Mp > M else rows
-            lat, en, area, pw = ops.batched_cost_multi(
-                rp[:, :NUM_FIELDS].reshape(-1, TN, NUM_FIELDS),
-                rp[:, _PE_COL].reshape(-1, TN),
-                rp[:, _KT_COL].reshape(-1, TN),
-                rp[:, _DF_COL].reshape(-1, TN))
-            out = np.stack([np.asarray(lat), np.asarray(en),
-                            np.asarray(area), np.asarray(pw)],
-                           axis=-1).reshape(Mp, 4)
-            return out[:M]
-        # jnp-oracle path: pad to pow2 buckets to bound recompiles.
-        Mp = _next_pow2(M)
-        rp = np.ones((Mp, ROW_WIDTH), np.float32)
-        rp[:M] = rows
-        out = _flat_cost(rp[:, :NUM_FIELDS], rp[:, _PE_COL],
-                         rp[:, _KT_COL], rp[:, _DF_COL])
-        return np.asarray(out)[:M]
+
+def eval_point_rows(rows: np.ndarray, use_kernel: bool) -> np.ndarray:
+    """Evaluate (M, ROW_WIDTH) fresh points -> (M, 4) f32 costs.
+
+    Per-row results are bit-stable across batch size and padding (the
+    computation is elementwise per row), so any caller packing the same row
+    gets the same bytes -- the property both the memo cache and serial ==
+    service-batched byte-identity rest on.
+    """
+    M = rows.shape[0]
+    if use_kernel:
+        from repro.kernels import ops
+
+        # Tile the flat point list into the kernel's (B', TN) lanes.
+        from repro.kernels.costmodel_eval import TN
+        Mp = -(-M // TN) * TN
+        pad = np.ones((Mp - M, ROW_WIDTH), np.float32)
+        pad[:, NUM_FIELDS - 1] = 0.0            # repeat=0: benign rows
+        rp = np.concatenate([rows, pad], axis=0) if Mp > M else rows
+        lat, en, area, pw = ops.batched_cost_multi(
+            rp[:, :NUM_FIELDS].reshape(-1, TN, NUM_FIELDS),
+            rp[:, _PE_COL].reshape(-1, TN),
+            rp[:, _KT_COL].reshape(-1, TN),
+            rp[:, _DF_COL].reshape(-1, TN))
+        out = np.stack([np.asarray(lat), np.asarray(en),
+                        np.asarray(area), np.asarray(pw)],
+                       axis=-1).reshape(Mp, 4)
+        return out[:M]
+    # jnp-oracle path: pad to pow2 buckets to bound recompiles.
+    Mp = _next_pow2(M)
+    rp = np.ones((Mp, ROW_WIDTH), np.float32)
+    rp[:M] = rows
+    out = _flat_cost(rp[:, :NUM_FIELDS], rp[:, _PE_COL],
+                     rp[:, _KT_COL], rp[:, _DF_COL])
+    return np.asarray(out)[:M]
+
+
+def pack_point_rows(layers: np.ndarray, pe, kt, df) -> np.ndarray:
+    """(N, NUM_FIELDS) layers x (b, N) assignments -> (b*N, ROW_WIDTH) rows
+    in the batcher/cache key format."""
+    layers = np.asarray(layers, np.float32)
+    pe = np.asarray(pe, np.float32)
+    b, N = pe.shape
+    kt = np.broadcast_to(np.asarray(kt, np.float32), (b, N))
+    df = np.broadcast_to(np.asarray(df, np.float32), (b, N))
+    points = np.empty((b * N, ROW_WIDTH), np.float32)
+    points[:, :NUM_FIELDS] = np.broadcast_to(
+        layers, (b, N, NUM_FIELDS)).reshape(-1, NUM_FIELDS)
+    points[:, _PE_COL] = pe.ravel()
+    points[:, _KT_COL] = kt.ravel()
+    points[:, _DF_COL] = df.ravel()
+    return points
+
+
+def make_local_costs_eval(env, ecfg, use_kernel: Optional[bool] = None):
+    """Serial nsga2's default fitness hook: ``eval_fn(pe, kt, df) -> (b, 4)``
+    running the EXACT per-point and aggregation programs a
+    :class:`CostEvalBatcher` dispatches -- minus the queue, fusion window
+    and memo cache.  Because ``eval_point_rows`` is bit-stable per row and
+    ``_agg_multi_fn`` is the same jitted program over the same (b, N, 4)
+    shape, a serial ``run_search`` and a service-batched one produce
+    byte-identical outcomes by construction (benchmarks/bench_frontier.py
+    asserts it end to end).
+    """
+    layers = np.asarray(env.layers, np.float32)
+    budget = np.float32(env.budget)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    agg = _agg_multi_fn(ecfg)
+
+    def eval_fn(pe, kt, df):
+        pe = np.asarray(pe, np.float32)
+        b, N = pe.shape
+        rows = pack_point_rows(layers, pe, kt, df)
+        vals = eval_point_rows(rows, use_kernel).reshape(b, N, 4)
+        return np.asarray(agg(jnp.asarray(vals), budget))
+
+    return eval_fn

@@ -14,7 +14,9 @@ and multiplexes them onto shared hardware:
     SAME batcher via a raw-array
     ``eval_fn`` -- GA populations are the largest eval batches in the
     system, so a whole generation fuses with concurrent traffic and hits
-    the memo cache;
+    the memo cache; ``nsga2`` does the same through a (b, 4)-costs variant
+    of the hook (frontier searches share per-point cache entries with
+    scalar searches -- the point costs are the same rows);
   * the chunked JAX engines (``reinforce``, ``two_stage``, ``a2c``, ``ppo2``,
     ``fanout``) interleave at chunk granularity -- XLA releases the GIL
     during compile and execute -- and stream per-request progress through
@@ -75,6 +77,14 @@ BATCHED_METHODS = ("random", "grid", "bo")
 # multiplexes at chunk granularity only.
 RAW_BATCHED_METHODS = ("ga", "sa", "relaxed")
 
+# Chunked multi-objective engines whose ``eval_fn(pe, kt, df)`` returns
+# (b, 4) aggregated whole-model costs instead of scalar fitness: NSGA-II
+# populations fuse through the same batcher (same per-point dedup + memo
+# cache -- a point evaluated for a scalar search is a cache hit for a
+# frontier search and vice versa) via
+# :meth:`SearchService._make_costs_eval_fn`.
+COSTS_BATCHED_METHODS = ("nsga2",)
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
@@ -84,6 +94,7 @@ class ServiceConfig:
     use_kernel: Optional[bool] = None   # None: Pallas kernel on TPU only
     batched_methods: Tuple[str, ...] = BATCHED_METHODS
     raw_batched_methods: Tuple[str, ...] = RAW_BATCHED_METHODS
+    costs_batched_methods: Tuple[str, ...] = COSTS_BATCHED_METHODS
     dispatch_workers: int = 1     # fused-dispatch pool size (batcher threads)
     default_progress_every: int = 200   # service-side chunking when the
     #                                     request carries no callback
@@ -229,6 +240,8 @@ class SearchService:
             options["eval_fn"] = self._make_eval_fn(ticket)
         elif method in self.cfg.raw_batched_methods:
             options["eval_fn"] = self._make_raw_eval_fn(ticket)
+        elif method in self.cfg.costs_batched_methods:
+            options["eval_fn"] = self._make_costs_eval_fn(ticket)
         return dataclasses.replace(
             request, options=options, on_progress=on_progress,
             progress_every=progress_every)
@@ -274,6 +287,23 @@ class SearchService:
             if ticket.cancelled:
                 raise SearchCancelled(f"search {ticket.uid} cancelled")
             return batcher.evaluate(layers, pe, kt, df, ecfg, budget)
+
+        return eval_fn
+
+    def _make_costs_eval_fn(self, ticket: SearchTicket):
+        """Raw-array eval hook for the multi-objective engines: the same
+        batcher routing as :meth:`_make_raw_eval_fn` but returning (b, 4)
+        aggregated (lat, en, area, pw) costs -- what NSGA-II's constrained
+        dominance ranks on.  Also the per-generation cancellation point."""
+        request = ticket.request
+        ecfg = request.env
+        layers, _, _, budget = self._decode_tables(request)
+        batcher = self.batcher
+
+        def eval_fn(pe, kt, df):
+            if ticket.cancelled:
+                raise SearchCancelled(f"search {ticket.uid} cancelled")
+            return batcher.evaluate_costs(layers, pe, kt, df, ecfg, budget)
 
         return eval_fn
 

@@ -1,0 +1,126 @@
+"""Golden regression tests for core/env.py constraint semantics.
+
+Pins exact float32 values (not allclose -- the aggregation layer must stay
+byte-for-byte what it was when the multi-objective refactor landed) for one
+conv / dwconv / gemm layer each:
+
+  * per-layer (latency, energy, area, power) from the cost model;
+  * LP aggregation = SUM over layers (one chip partition per layer);
+  * LS aggregation = MAX over layers (one shared time-multiplexed design);
+  * feasibility against the Table II cloud budgets (LS/power is the
+    deliberately infeasible row);
+  * the ``blend`` objective ``lat^w * en^(1-w)`` at w in {0, 1/2, 1}
+    (w=0 == energy, w=1 == latency, exactly).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env as env_lib
+from repro.costmodel import maestro
+from repro.costmodel.layers import LayerSpec
+
+WL = [LayerSpec.conv(32, 64, 28, 28, 3, 3),
+      LayerSpec.dwconv(192, 28, 28, 3, 3),
+      LayerSpec.gemm(128, 256, 512)]
+PE = jnp.asarray([16.0, 37.0, 128.0], jnp.float32)
+KT = jnp.asarray([4.0, 7.0, 16.0], jnp.float32)
+DF = 0  # DLA
+
+# Per-layer (lat, en, area, pw) for (WL[i], PE[i], KT[i], DLA) -- exact f32.
+GOLDEN_LAYERS = {
+    "conv":   (778776.0, 69904.8203125, 115200.0, 24.6560001373291),
+    "dwconv": (42614.08203125, 63259.84765625, 377400.0, 67.00699615478516),
+    "gemm":   (131103.3125, 117588.171875, 716800.0, 178.8159942626953),
+}
+
+# (scenario, constraint) -> (budget, total_lat, total_en, total_area,
+#                            total_pw, objective, constraint_value, feasible)
+# LP totals are the SUMS of the per-layer rows above; LS area/power are the
+# MAXES (the gemm row); objectives (summed) are identical across the four.
+GOLDEN_AGG = {
+    ("LP", "area"):  (2252800.0, 952493.375, 250752.84375, 1209400.0,
+                      270.47900390625, 952493.375, 1209400.0, True),
+    ("LP", "power"): (374.2080078125, 952493.375, 250752.84375, 1209400.0,
+                      270.47900390625, 952493.375, 270.47900390625, True),
+    ("LS", "area"):  (972800.0, 952493.375, 250752.84375, 716800.0,
+                      178.8159942626953, 952493.375, 716800.0, True),
+    ("LS", "power"): (144.70399475097656, 952493.375, 250752.84375,
+                      716800.0, 178.8159942626953, 952493.375,
+                      178.8159942626953, False),
+}
+
+# blend_weight -> exact f32 objective; w=0/1 must equal the energy/latency
+# totals above bit-for-bit.
+GOLDEN_BLEND = {0.0: 250752.84375, 0.5: 488713.03125, 1.0: 952493.375}
+
+
+@pytest.mark.parametrize("kind", sorted(GOLDEN_LAYERS))
+def test_per_layer_golden(kind):
+    idx = {"conv": 0, "dwconv": 1, "gemm": 2}[kind]
+    ecfg = env_lib.EnvConfig(platform="cloud")
+    env = env_lib.make_env(WL, ecfg)
+    out = maestro.evaluate(env.layers, PE, KT, DF)
+    got = tuple(float(np.asarray(a, np.float32)[idx])
+                for a in (out.latency, out.energy, out.area, out.power))
+    assert got == tuple(float(np.float32(w)) for w in GOLDEN_LAYERS[kind])
+
+
+@pytest.mark.parametrize("scen,cons", sorted(GOLDEN_AGG))
+def test_aggregation_golden(scen, cons):
+    budget, tl, te, ta, tp, obj, cval, feas = GOLDEN_AGG[(scen, cons)]
+    ecfg = env_lib.EnvConfig(platform="cloud", scenario=scen,
+                             constraint=cons)
+    env = env_lib.make_env(WL, ecfg)
+    assert float(np.float32(env.budget)) == float(np.float32(budget))
+    g_tl, g_te, g_ta, g_tp, g_feas = env_lib.genome_costs_multi(
+        env, ecfg, PE, KT, DF)
+    got = tuple(float(np.asarray(v, np.float32))
+                for v in (g_tl, g_te, g_ta, g_tp))
+    assert got == tuple(float(np.float32(w)) for w in (tl, te, ta, tp))
+    assert bool(g_feas) is feas
+    g_obj, g_cval, g_feas2 = env_lib.genome_cost(env, ecfg, PE, KT, DF)
+    assert float(np.asarray(g_obj, np.float32)) == float(np.float32(obj))
+    assert float(np.asarray(g_cval, np.float32)) == float(np.float32(cval))
+    assert bool(g_feas2) is feas
+    # Scalar view == multi view on the shared fields, bit-for-bit.
+    assert float(np.asarray(g_cval, np.float32)) == (
+        got[2] if cons == "area" else got[3])
+    assert bool(g_feas) is bool(g_feas2)
+    # Feasibility mask agrees with the aggregate verdict.
+    assert bool(env_lib.feasibility_mask(env, ecfg, PE, KT, DF)) is feas
+
+
+def test_lp_is_sum_ls_is_max_of_golden_layers():
+    """The aggregates above really are the sum/max of the per-layer rows."""
+    rows = np.asarray([GOLDEN_LAYERS[k] for k in ("conv", "dwconv", "gemm")],
+                      np.float32)
+    lp = GOLDEN_AGG[("LP", "area")]
+    ls = GOLDEN_AGG[("LS", "area")]
+    assert float(rows[:, 2].sum()) == float(np.float32(lp[3]))   # area sum
+    assert float(rows[:, 3].sum()) == float(np.float32(lp[4]))   # power sum
+    assert float(rows[:, 2].max()) == float(np.float32(ls[3]))   # area max
+    assert float(rows[:, 3].max()) == float(np.float32(ls[4]))   # power max
+
+
+@pytest.mark.parametrize("w", sorted(GOLDEN_BLEND))
+def test_blend_objective_golden(w):
+    ecfg = env_lib.EnvConfig(platform="cloud", objective="blend",
+                             blend_weight=w)
+    env = env_lib.make_env(WL, ecfg)
+    obj, _, _ = env_lib.genome_cost(env, ecfg, PE, KT, DF)
+    assert float(np.asarray(obj, np.float32)) == float(
+        np.float32(GOLDEN_BLEND[w]))
+
+
+def test_blend_endpoints_equal_pure_objectives():
+    assert GOLDEN_BLEND[0.0] == GOLDEN_AGG[("LP", "area")][2]   # == energy
+    assert GOLDEN_BLEND[1.0] == GOLDEN_AGG[("LP", "area")][1]   # == latency
+
+
+def test_blend_has_no_per_layer_decomposition():
+    """The RL reward path cannot decompose lat^w * en^(1-w) per step."""
+    ecfg = env_lib.EnvConfig(platform="cloud", objective="blend")
+    env = env_lib.make_env(WL, ecfg)
+    with pytest.raises(ValueError, match="blend"):
+        env_lib.layer_cost(env, ecfg, 0, PE[0], KT[0], DF)

@@ -139,3 +139,63 @@ def test_flash_decode_fallback_unaligned():
     v = jax.random.normal(key, (1, 700, 2, 128))
     o = ops.decode_attention(q, k, v, use_kernel=True)
     assert o.shape == (1, 4, 128) and bool(jnp.isfinite(o).all())
+
+
+# ---------------------------------------------------------------------------
+# Multi-DNN mix rows: ragged per-model layer counts through the padded path.
+# ---------------------------------------------------------------------------
+def _ragged_mix_rows(names, tokens=32):
+    """Stack >=3 model configs' layer rows, padding ragged tails with
+    repeat=0 layers (benign: all four cost outputs are zero)."""
+    import dataclasses
+
+    packs = [layers_to_array(workloads.get_workload(n, tokens=tokens))
+             for n in names]
+    counts = [len(p) for p in packs]
+    N = max(counts)
+    pad = dataclasses.replace(LayerSpec.gemm(1, 1, 1), repeat=0).as_row()
+    rows = np.stack([np.concatenate([p, np.tile(pad, (N - len(p), 1))])
+                     for p in packs]).astype(np.float32)
+    return rows, counts
+
+
+MIX_NAMES = ["qwen1p5_0p5b", "whisper_small", "mamba2_130m"]
+
+
+def test_mix_rows_oracle_wrapper_is_exact():
+    """batched_cost_multi(use_kernel=False) == cost_eval_multi_ref verbatim:
+    the wrapper's transpose/broadcast plumbing is lossless on ragged mix
+    rows from three different model configs."""
+    from repro.kernels import ref
+
+    rows, counts = _ragged_mix_rows(MIX_NAMES)
+    assert len(set(counts)) == 3            # genuinely ragged
+    B, N = rows.shape[:2]
+    rng = np.random.default_rng(7)
+    pe = rng.integers(1, 161, (B, N)).astype(np.float32)
+    kt = rng.integers(1, 17, (B, N)).astype(np.float32)
+    df = rng.integers(0, 3, (B, N)).astype(np.float32)
+    got = ops.batched_cost_multi(rows, pe, kt, df, use_kernel=False)
+    want = ref.cost_eval_multi_ref(rows.transpose(0, 2, 1), pe, kt, df)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_mix_rows_kernel_matches_oracle(seed):
+    """Pallas per-row-layers kernel on the padded ragged mix: within an ulp
+    of the oracle on every output (the kernel's fused accumulations round
+    once differently); repeat=0 padding rows are exactly zero."""
+    rows, counts = _ragged_mix_rows(MIX_NAMES)
+    B, N = rows.shape[:2]
+    rng = np.random.default_rng(seed)
+    pe = rng.integers(1, 161, (B, N)).astype(np.float32)
+    kt = rng.integers(1, 17, (B, N)).astype(np.float32)
+    df = rng.integers(0, 3, (B, N)).astype(np.float32)
+    got = ops.batched_cost_multi(rows, pe, kt, df, use_kernel=True)
+    want = ops.batched_cost_multi(rows, pe, kt, df, use_kernel=False)
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        np.testing.assert_allclose(g, w, rtol=5e-7)
+        for b, n in enumerate(counts):      # padding stays exactly zero
+            assert np.all(g[b, n:] == 0.0)

@@ -37,11 +37,13 @@ CASES = {
     "fanout": (100, {"inner": "random", "n_shards": 2, "backend": "serial"}),
     "dist_reinforce": (20, {}),
     "relaxed": (60, {"steps_per_eval": 5, "restarts": 2}),
+    "nsga2": (120, {"population": 30}),
 }
 
 # Engines that stream live through on_chunk (cancellation points); the
 # single-shot baselines emit their trace post-hoc instead.
-CHUNKED = ("reinforce", "two_stage", "a2c", "ppo2", "ga", "sa", "relaxed")
+CHUNKED = ("reinforce", "two_stage", "a2c", "ppo2", "ga", "sa", "relaxed",
+           "nsga2")
 
 
 def _req(method, **kw):
@@ -96,6 +98,25 @@ def test_trial_stream_covers_the_budget(method):
         assert steps[-1] == eps                 # full budget accounted
     # best_value converges to the outcome's best.
     assert min(t.best_value for t in trials) == pytest.approx(out.best_value)
+
+
+@pytest.mark.parametrize("method", sorted(CASES))
+def test_reported_best_is_feasible(method):
+    """Registry-wide guarantee: a reported best assignment satisfies the
+    platform budget under ``aggregate_costs`` -- no optimizer may claim a
+    feasible outcome whose genome the env rejects."""
+    import jax.numpy as jnp
+
+    out = api.run_search(_req(method))
+    if not out.feasible:
+        return
+    from repro.costmodel import workloads
+
+    env = env_lib.make_env(workloads.get_workload("ncf"), ECFG)
+    ok = env_lib.feasibility_mask(
+        env, ECFG, jnp.asarray(out.pe, jnp.float32),
+        jnp.asarray(out.kt, jnp.float32), np.asarray(out.df))
+    assert bool(ok), (out.pe, out.kt, out.df)
 
 
 @pytest.mark.parametrize("method", CHUNKED)

@@ -329,3 +329,83 @@ def test_closed_batcher_rejects_evaluations():
         b.evaluate(np.ones((1, 8), np.float32), np.ones((1, 1), np.float32),
                    np.ones((1, 1), np.float32), np.float32(0), ECFG,
                    np.float32(1.0))
+
+
+# ---------------------------------------------------------------------------
+# Multi-objective (nsga2) through the service.
+# ---------------------------------------------------------------------------
+def test_nsga2_through_service_byte_identical_to_serial(svc):
+    """nsga2 routes (b, 4)-cost batches through evaluate_costs; outcomes
+    (history, assignment AND frontier) equal the serial run byte for byte."""
+    opt = {"population": 15}
+    want = api.run_search(_req("nsga2", eps=120, seed=3, options=dict(opt)))
+    got = svc.submit(_req("nsga2", eps=120, seed=3,
+                          options=dict(opt))).result(timeout=300)
+    assert got.best_value == want.best_value
+    assert got.history.tobytes() == want.history.tobytes()
+    np.testing.assert_array_equal(got.pe, want.pe)
+    np.testing.assert_array_equal(got.kt, want.kt)
+    for k in ("lat", "en", "area", "pw"):
+        np.testing.assert_array_equal(got.frontier[k], want.frontier[k])
+    assert svc.stats()["points"] > 0
+
+
+def test_evaluate_costs_matches_local_eval_and_shares_cache():
+    """Batcher evaluate_costs == the serial make_local_costs_eval bytes,
+    and its per-point cache entries are shared with scalar evaluate()."""
+    from repro.costmodel import workloads
+    from repro.serving.batcher import make_local_costs_eval
+
+    env = env_lib.make_env(workloads.get_workload("ncf"), ECFG)
+    layers = np.asarray(env.layers, np.float32)
+    rng = np.random.default_rng(0)
+    b, N = 9, env.num_layers
+    pe = env.pe_table[rng.integers(0, 12, (b, N))].astype(np.float32)
+    kt = env.kt_table[rng.integers(0, 12, (b, N))].astype(np.float32)
+    df = np.full((b, N), ECFG.dataflow, np.float32)
+
+    bat = CostEvalBatcher()
+    try:
+        costs = bat.evaluate_costs(layers, pe, kt, df, ECFG,
+                                   float(env.budget))
+        assert costs.shape == (b, 4)
+        local = make_local_costs_eval(env, ECFG, use_kernel=False)
+        np.testing.assert_array_equal(costs,
+                                      np.asarray(local(pe, kt, df)))
+        # Scalar fitness over the same points: all cache hits, zero fresh.
+        misses = bat.cache.misses
+        fit = bat.evaluate(layers, pe, kt, df, ECFG, float(env.budget))
+        assert bat.cache.misses == misses
+        # And the scalar view agrees with the multi view's objective.
+        feasible = np.isfinite(fit)
+        np.testing.assert_array_equal(fit[feasible], costs[feasible, 0])
+    finally:
+        bat.close()
+
+
+def test_cache_keys_never_collide_across_workloads():
+    """Two different layer descriptors with the SAME (pe, kt, df) must
+    occupy distinct cache entries -- the key covers the full point row."""
+    from repro.costmodel import layers_to_array
+    from repro.costmodel.layers import LayerSpec
+    from repro.serving.batcher import pack_point_rows
+
+    a = layers_to_array([LayerSpec.gemm(64, 64, 64)])
+    c = layers_to_array([LayerSpec.conv(16, 16, 14, 14, 3, 3)])
+    pe = np.asarray([[32.0]], np.float32)
+    kt = np.asarray([[4.0]], np.float32)
+    df = np.asarray([[0.0]], np.float32)
+    rows_a = pack_point_rows(a, pe, kt, df)
+    rows_c = pack_point_rows(c, pe, kt, df)
+    assert rows_a.tobytes() != rows_c.tobytes()
+
+    bat = CostEvalBatcher()
+    try:
+        budget = 1e18
+        fa = bat.evaluate(a, pe, kt, df, ECFG, budget)
+        fc = bat.evaluate(c, pe, kt, df, ECFG, budget)
+        assert len(bat.cache) == 2          # one entry per distinct row
+        assert bat.cache.misses == 2        # no cross-workload hit
+        assert fa[0] != fc[0]               # and genuinely different costs
+    finally:
+        bat.close()
