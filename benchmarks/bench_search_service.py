@@ -20,15 +20,25 @@ execution strategy, not an approximation).  Reported: wall-clock speedup,
 searches/sec, cache hit rate, and batcher fusion stats.  A warm wave (the
 same traffic again) shows the steady-state regime where the cache has
 saturated the popular workloads' point space.
+
+A final *telemetry probe* wave re-runs reinforce/ga/nsga2/relaxed through
+the service with ``repro.obs`` enabled: each outcome's flight-recorder
+summary lands in the results JSON, the span trace is written to
+``results/search_service_trace.jsonl`` and the metrics registry to
+``results/search_service_metrics.prom`` (the artifacts
+``tools/check_telemetry.py`` validates in CI).  The timed phases above run
+with telemetry off, so the headline numbers measure the un-instrumented
+fast path.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from benchmarks import common
-from repro import api
+from repro import api, obs
 from repro.serving import SearchService, ServiceConfig
 
 POOL_WORKERS = 2  # sized for the 2-core dev container; raise on real hosts
@@ -58,6 +68,40 @@ def _assert_identical(serial, outs, exact):
             assert np.array_equal(a.history, b.history), a.method
         else:
             np.testing.assert_allclose(a.best_value, b.best_value, rtol=1e-5)
+
+
+def _telemetry_probe(eps: int):
+    """Instrumented wave: the chunked-engine quartet through the service.
+
+    Returns (per-method telemetry summaries, trace path, metrics path,
+    metrics snapshot) and leaves the artifacts in ``results/`` for
+    ``tools/check_telemetry.py``.
+    """
+    os.makedirs(common.RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(common.RESULTS_DIR,
+                              "search_service_trace.jsonl")
+    obs.reset()
+    obs.enable(trace=True, jsonl_path=trace_path)
+    reqs = [api.SearchRequest(workload="ncf",
+                              env=api.EnvConfig(platform="cloud"),
+                              eps=eps, seed=0, method=m)
+            for m in ("reinforce", "ga", "nsga2", "relaxed")]
+    with SearchService(ServiceConfig(max_workers=4)) as svc:
+        outs = svc.run_all(reqs)
+    telemetry = {o.method: o.telemetry for o in outs}
+    for m, t in telemetry.items():
+        assert t is not None and t.get("hard_evals", 0) > 0, (m, t)
+    prom_path = common.write_metrics_prom("search_service_metrics")
+    snapshot = obs.REGISTRY.snapshot()
+    obs.tracer().close()   # the JSONL sink already streamed every span
+    obs.disable()
+    common.print_table(
+        "Telemetry probe (instrumented service wave)",
+        ["method", "hard evals", "chunks", "cache hit rate", "jit compiles"],
+        [[m, t.get("hard_evals"), t.get("chunks"),
+          t.get("cache_hit_rate"), t.get("jit_compiles")]
+         for m, t in telemetry.items()])
+    return telemetry, trace_path, prom_path, snapshot
 
 
 def run(budget_name: str = "quick") -> dict:
@@ -145,8 +189,15 @@ def run(budget_name: str = "quick") -> dict:
           stats_pool["fresh_points"],
           stats_pool["max_concurrent_dispatches"]]])
 
+    telemetry, trace_path, prom_path, metrics_snapshot = _telemetry_probe(
+        eps)
+
     return {
         "n_users": n_users, "eps": eps,
+        "telemetry_probe": telemetry,
+        "trace_path": trace_path,
+        "metrics_path": prom_path,
+        "metrics": metrics_snapshot,
         "pool_workers": POOL_WORKERS,
         "serial_seconds": t_serial.seconds,
         "service_cold_seconds": t_cold.seconds,

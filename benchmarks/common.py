@@ -75,3 +75,26 @@ class Timer:
 
     def __exit__(self, *a):
         self.seconds = time.time() - self.t0
+
+
+def stamp_metrics(payload: Dict, key: str = "metrics") -> Dict:
+    """Attach the current ``repro.obs`` metrics snapshot to a results
+    payload (no-op when telemetry is disabled) -- benchmarks call this just
+    before ``save_json`` so ``results/*.json`` carry the registry state
+    that produced them."""
+    from repro import obs
+
+    if obs.enabled():
+        payload[key] = obs.REGISTRY.snapshot()
+    return payload
+
+
+def write_metrics_prom(name: str) -> str:
+    """Write the current registry as ``results/<name>.prom`` (Prometheus
+    text exposition) and return the path."""
+    from repro import obs
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.prom")
+    obs.write_prometheus(path)
+    return path

@@ -32,6 +32,7 @@ BENCHES = [
     ("dist_search", "benchmarks.bench_dist_search"),
     ("fanout_backends", "benchmarks.bench_fanout_backends"),
     ("search_service", "benchmarks.bench_search_service"),
+    ("obs_overhead", "benchmarks.bench_obs_overhead"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -18,6 +18,9 @@ import importlib
 from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
 
 from repro.api.types import SearchOutcome, SearchRequest
+from repro.obs import recorder as obs_recorder
+from repro.obs import state as obs_state
+from repro.obs import trace as obs_trace
 
 # Modules that register optimizers as an import side effect.
 _PLUGIN_MODULES = (
@@ -84,5 +87,23 @@ def list_optimizers() -> Tuple[str, ...]:
 
 
 def run_search(request: SearchRequest) -> SearchOutcome:
-    """One-call entry point: dispatch ``request`` to ``request.method``."""
-    return get_optimizer(request.method).run(request)
+    """One-call entry point: dispatch ``request`` to ``request.method``.
+
+    With :mod:`repro.obs` telemetry enabled, the run executes under a fresh
+    :class:`~repro.obs.recorder.FlightRecorder` (installed thread-locally,
+    so concurrent service searches each get their own) inside a
+    ``search.run`` span, and the recorder's summary lands on
+    ``outcome.telemetry``.  Telemetry is observational only -- the outcome
+    is byte-identical with it on or off (asserted registry-wide in
+    tests/test_optimizer_conformance.py).
+    """
+    opt = get_optimizer(request.method)
+    if not obs_state.enabled:
+        return opt.run(request)
+    rec = obs_recorder.FlightRecorder(engine=opt.name)
+    with obs_recorder.recording(rec), \
+            obs_trace.span("search.run", method=opt.name, eps=request.eps,
+                           seed=request.seed):
+        out = opt.run(request)
+    out.telemetry = rec.summary()
+    return out

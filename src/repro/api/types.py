@@ -111,6 +111,12 @@ class SearchOutcome:
     point is mutually non-dominating on (lat, en) and satisfies the
     platform budget.  Chunk-by-chunk frontier snapshots ride in
     ``extras["frontier_trace"]`` (list of (F_i, 4) cost arrays).
+
+    telemetry is the search's flight-recorder summary (hard evals, cache
+    hit rate, queue-wait/dispatch timings, JIT compiles...) -- populated by
+    :func:`repro.api.run_search` when ``repro.obs`` telemetry is enabled,
+    None otherwise.  Purely observational: the same search with telemetry
+    on and off returns byte-identical results everywhere else.
     """
 
     method: str
@@ -126,6 +132,46 @@ class SearchOutcome:
     feasible: bool
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
     frontier: Optional[Dict[str, np.ndarray]] = None
+    telemetry: Optional[Dict[str, Any]] = None
+
+    def summary(self) -> str:
+        """One human-readable report of the run -- the launcher prints this
+        at end-of-run; handy in notebooks too."""
+        lines = [
+            f"method={self.method}  seed={self.seed}  eps={self.eps}",
+            (f"best_value={self.best_value:.6g}  "
+             f"feasible={self.feasible}  "
+             f"converged@{self.samples_to_convergence}  "
+             f"wall={self.wall_seconds:.2f}s"),
+        ]
+        if self.feasible:
+            lines.append(
+                f"assignment: pe={np.asarray(self.pe).tolist()} "
+                f"kt={np.asarray(self.kt).tolist()} "
+                f"df={np.asarray(self.df).tolist()}")
+        if self.frontier is not None:
+            lines.append(f"frontier: {len(self.frontier['lat'])} "
+                         "non-dominated feasible designs")
+        t = self.telemetry
+        if t:
+            bits = []
+            if "hard_evals" in t:
+                bits.append(f"hard_evals={int(t['hard_evals'])}")
+            if "chunks" in t:
+                bits.append(f"chunks={int(t['chunks'])}")
+            if "cache_hit_rate" in t:
+                bits.append(f"cache_hit_rate={t['cache_hit_rate']:.2%}")
+            if "jit_compiles" in t:
+                bits.append(f"jit_compiles={int(t['jit_compiles'])}")
+            for key, label in (("queue_wait_s", "queue_wait"),
+                               ("dispatch_s", "dispatch"),
+                               ("device_s", "device")):
+                s = t.get(key)
+                if isinstance(s, dict):
+                    bits.append(f"{label}={s['sum']:.3f}s")
+            if bits:
+                lines.append("telemetry: " + "  ".join(bits))
+        return "\n".join(lines)
 
 
 def samples_to_convergence(trace: np.ndarray, tol: float = 0.05) -> int:

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunk as chunk_lib
 from repro.core import env as env_lib
+from repro.obs import instrument as obs_instrument
 
 
 class BaselineResult(NamedTuple):
@@ -64,6 +66,7 @@ def random_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
         key, k = jax.random.split(key)
         genomes = jax.random.randint(k, (n, N, 2), 0, ecfg.levels)
         fit, pe, kt = eval_b(genomes)
+        obs_instrument.hard_evals("random", n)
         fit = np.asarray(fit)
         # Seed the trace with the best *before* this batch so no sample is
         # credited ahead of being drawn (keeps convergence plots honest).
@@ -105,6 +108,7 @@ def grid_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
                 break
         genomes = np.minimum(digits.reshape(n, N, 2), ecfg.levels - 1)
         fit, pe, kt = eval_b(jnp.asarray(genomes))
+        obs_instrument.hard_evals("grid", n)
         fit = np.asarray(fit)
         hist.append(np.minimum(np.minimum.accumulate(fit), best))
         i = int(fit.argmin())
@@ -242,39 +246,30 @@ def run_sa_search(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
                         jnp.float32(cfg.temperature), key,
                         jnp.zeros((), jnp.int32))
 
-    chunk = eps if not chunk else max(int(chunk), 1)
-    hist = []
-    done = 0
     if eval_fn is None:
         @functools.partial(jax.jit, static_argnames=("n",))
-        def run_chunk(state, n):
+        def scan_chunk(state, n):
             return jax.lax.scan(engine.step_fn, state, None, length=n)
 
-        while done < eps:
-            n = min(chunk, eps - done)
-            state, h = run_chunk(state, n)
-            h = np.asarray(h)
-            hist.append(h)
-            done += n
-            if on_chunk is not None:
-                on_chunk(state, h, done)
+        def run_chunk(state, n):
+            state, h = scan_chunk(state, n)
+            return state, np.asarray(h)
     else:
         propose = jax.jit(engine.propose)
         accept = jax.jit(engine.accept)
-        while done < eps:
-            n = min(chunk, eps - done)
+
+        def run_chunk(state, n):
             h = np.empty((n,), np.float32)
             for s in range(n):
                 cand, k4, key = propose(state)
                 cand_fit = host_eval(np.asarray(cand))
                 state, bf = accept(state, cand, cand_fit, k4, key)
                 h[s] = np.float32(bf)
-            hist.append(h)
-            done += n
-            if on_chunk is not None:
-                on_chunk(state, h, done)
-    return state, (np.concatenate(hist) if hist
-                   else np.empty((0,), np.float32))
+            return state, h
+
+    state, hist = chunk_lib.drive(state, eps, chunk, run_chunk, on_chunk,
+                                  engine="sa")
+    return state, chunk_lib.concat_hist(hist)
 
 
 def sa_solution(env: env_lib.EnvArrays, state: SAState):
@@ -316,6 +311,7 @@ def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
 
     X = rng.integers(0, L, size=(min(init_random, eps), N, 2)).astype(np.int32)
     fit, pe_all, kt_all = eval_b(jnp.asarray(X))
+    obs_instrument.hard_evals("bo", len(X))
     y = np.asarray(fit, dtype=np.float64)
     hist = list(np.minimum.accumulate(np.where(np.isinf(y), np.inf, y)))
 
@@ -355,6 +351,7 @@ def bayes_opt(workload, ecfg: env_lib.EnvConfig, eps: int = 5000,
         # in the eps-length history yet reported as the result).
         pick = cand[np.argsort(-score)[:min(batch, eps - len(y))]]
         fit, _, _ = eval_b(jnp.asarray(pick))
+        obs_instrument.hard_evals("bo", len(pick))
         fit = np.asarray(fit, dtype=np.float64)
         X = np.concatenate([X, pick], axis=0)
         y = np.concatenate([y, fit])

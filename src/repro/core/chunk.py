@@ -1,0 +1,83 @@
+"""The shared chunk loop every chunked engine drives through.
+
+Every resumable engine in this repo -- reinforce, a2c/ppo2, both GAs,
+NSGA-II, SA and the relaxed one-shot engine -- runs the same host loop:
+split ``total`` steps into ``chunk``-sized pieces, run one piece, append
+its history, fire ``on_chunk(state, h, done)`` (the unified API's streaming
++ cancellation point), repeat.  :func:`drive` owns that loop in ONE place,
+which is also where per-chunk telemetry lives: one engine-tagged
+``search.chunk`` span per chunk, one hard-eval counter tick per evaluation,
+and per-chunk wall-clock into the current flight recorder.
+
+The contract is byte-stability: ``drive`` sequences ``run_chunk`` and
+``on_chunk`` exactly as the engines' hand-rolled loops did (same chunk
+normalization, same ``min(chunk, total - done)`` splits, same callback
+arguments), and the telemetry is observational only -- instrumented and
+un-instrumented runs return identical bytes (asserted registry-wide in
+tests/test_optimizer_conformance.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.obs import instrument as obs_instrument
+from repro.obs import state as obs_state
+from repro.obs import trace as obs_trace
+
+
+def drive(state, total: int, chunk: Optional[int],
+          run_chunk: Callable,
+          on_chunk: Optional[Callable] = None,
+          *,
+          engine: str,
+          evals_per_step: int = 1,
+          start: int = 0) -> Tuple[object, List]:
+    """Run ``total - start`` more steps of ``run_chunk`` in chunks.
+
+    run_chunk(state, n) -> (state, h): one piece of ``n`` steps; ``h`` is
+        that piece's history (numpy array or pytree -- ``drive`` never
+        inspects it).
+    on_chunk(state, h, done): fires after every piece with ``done`` counted
+        from 0 (``start`` offsets it for engines whose loop has a prologue,
+        e.g. the relaxed engine's rounding-variant tail).
+    engine / evals_per_step: telemetry tags -- each chunk of ``n`` steps
+        accounts ``n * evals_per_step`` hard evaluations (GA generations
+        evaluate a population per step, RL epochs E episodes, SA one).
+
+    Returns ``(state, [h, ...])``; callers concatenate with
+    :func:`concat_hist` (or their own dict-aware merge).
+    """
+    chunk = (total - start) if not chunk else max(int(chunk), 1)
+    hist: List = []
+    done = start
+    while done < total:
+        n = min(chunk, total - done)
+        if obs_state.enabled:
+            t0 = time.perf_counter()
+            with obs_trace.span("search.chunk", engine=engine, start=done,
+                                steps=n, evals=n * evals_per_step):
+                state, h = run_chunk(state, n)
+            obs_instrument.chunk_metrics(engine, n, n * evals_per_step,
+                                         time.perf_counter() - t0)
+        else:
+            state, h = run_chunk(state, n)
+        hist.append(h)
+        done += n
+        if on_chunk is not None:
+            on_chunk(state, h, done)
+    return state, hist
+
+
+def concat_hist(hist: List) -> np.ndarray:
+    """Concatenate per-chunk history arrays ((0,) f32 when no chunks ran)."""
+    return (np.concatenate(hist) if hist else np.empty((0,), np.float32))
+
+
+def concat_hist_dict(hist: List) -> dict:
+    """Concatenate per-chunk history dicts key-wise (RL-family metrics)."""
+    if not hist:
+        return {}
+    return {k: np.concatenate([h[k] for h in hist]) for k in hist[0]}

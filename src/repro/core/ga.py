@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunk as chunk_lib
 from repro.core import env as env_lib
 from repro.costmodel import dataflows as dfl
 
@@ -189,7 +190,7 @@ def make_ga_engine(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
 def run_chunked_engine(env, ecfg, engine: GAEngine, state,
                        generations: int, chunk: Optional[int], on_chunk,
                        eval_fn, mix_df: bool, raw_genome: bool = False,
-                       fixed_df=None):
+                       fixed_df=None, engine_name: str = "ga"):
     """Shared chunk driver for every population engine.  Returns
     (state, (gens,) history).
 
@@ -197,7 +198,10 @@ def run_chunked_engine(env, ecfg, engine: GAEngine, state,
     engine whose state leads with a ``pop`` field of candidates awaiting
     evaluation and whose ``evolve(state, fit)`` consumes their fitness
     (scalar (P,) or multi-objective (P, 4)) gets chunking, resume,
-    cancellation and eval_fn injection from this one loop.
+    cancellation and eval_fn injection from this one loop (via
+    :func:`repro.core.chunk.drive`, which also tags each chunk's telemetry
+    with ``engine_name`` -- one hard eval per population member per
+    generation).
 
     ``eval_fn=None`` scans ``gen_step`` in jitted chunks (fitness stays in
     the XLA program); with ``eval_fn(pe, kt, df) -> (P,) fitness`` each
@@ -208,30 +212,26 @@ def run_chunked_engine(env, ecfg, engine: GAEngine, state,
     (asserted in tests/test_search_service.py), and every other op is the
     identical jnp program.
     """
-    chunk = generations if not chunk else max(int(chunk), 1)
-    hist = []
-    done = 0
+    pop_size = int(state.pop.shape[0])
     if eval_fn is None:
         @functools.partial(jax.jit, static_argnames=("n",))
-        def run_chunk(state, n):
+        def scan_chunk(state, n):
             return jax.lax.scan(engine.gen_step, state, None, length=n)
 
-        while done < generations:
-            n = min(chunk, generations - done)
-            state, h = run_chunk(state, n)
-            h = np.asarray(h)
-            hist.append(h)
-            done += n
-            if on_chunk is not None:
-                on_chunk(state, h, done)
-        return state, (np.concatenate(hist) if hist
-                       else np.empty((0,), np.float32))
+        def run_chunk(state, n):
+            state, h = scan_chunk(state, n)
+            return state, np.asarray(h)
+
+        state, hist = chunk_lib.drive(
+            state, generations, chunk, run_chunk, on_chunk,
+            engine=engine_name, evals_per_step=pop_size)
+        return state, chunk_lib.concat_hist(hist)
 
     evolve = jax.jit(engine.evolve)
     pe_table = np.asarray(env.pe_table, np.float32)
     kt_table = np.asarray(env.kt_table, np.float32)
-    while done < generations:
-        n = min(chunk, generations - done)
+
+    def run_chunk(state, n):
         h = np.empty((n,), np.float32)
         for g in range(n):
             pop = np.asarray(state.pop)
@@ -250,12 +250,12 @@ def run_chunked_engine(env, ecfg, engine: GAEngine, state,
             fit = np.asarray(eval_fn(pe, kt, df), np.float32)
             state, bv = evolve(state, jnp.asarray(fit))
             h[g] = np.float32(bv)
-        hist.append(h)
-        done += n
-        if on_chunk is not None:
-            on_chunk(state, h, done)
-    return state, (np.concatenate(hist) if hist
-                   else np.empty((0,), np.float32))
+        return state, h
+
+    state, hist = chunk_lib.drive(
+        state, generations, chunk, run_chunk, on_chunk,
+        engine=engine_name, evals_per_step=pop_size)
+    return state, chunk_lib.concat_hist(hist)
 
 
 def run_ga_search(workload, ecfg: env_lib.EnvConfig,
@@ -282,7 +282,8 @@ def run_ga_search(workload, ecfg: env_lib.EnvConfig,
     if state is None:
         state = engine.init_carry(cfg.seed)
     return run_chunked_engine(env, ecfg, engine, state, cfg.generations,
-                              chunk, on_chunk, eval_fn, mix_df=ecfg.mix)
+                              chunk, on_chunk, eval_fn, mix_df=ecfg.mix,
+                              engine_name="ga")
 
 
 def ga_solution(env: env_lib.EnvArrays, ecfg: env_lib.EnvConfig,
@@ -398,7 +399,8 @@ def run_local_ga(workload, ecfg: env_lib.EnvConfig,
     fixed_df = np.asarray(init_df, np.float32) if eval_fn is not None else None
     return run_chunked_engine(env, ecfg, engine, state, cfg.generations,
                               chunk, on_chunk, eval_fn, mix_df=False,
-                              raw_genome=True, fixed_df=fixed_df)
+                              raw_genome=True, fixed_df=fixed_df,
+                              engine_name="local_ga")
 
 
 def local_ga(workload, ecfg: env_lib.EnvConfig,

@@ -416,7 +416,8 @@ def run_nsga2_search(workload, ecfg: env_lib.EnvConfig,
         state = engine.init_carry(cfg.seed)
     return ga_lib.run_chunked_engine(env, ecfg, engine, state,
                                      cfg.generations, chunk, on_chunk,
-                                     eval_fn, mix_df=ecfg.mix)
+                                     eval_fn, mix_df=ecfg.mix,
+                                     engine_name="nsga2")
 
 
 def frontier_points(state: NSGA2State) -> np.ndarray:

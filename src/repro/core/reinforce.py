@@ -25,6 +25,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import chunk as chunk_lib
 from repro.core import env as env_lib
 from repro.core import policy as policy_lib
 from repro.costmodel import maestro
@@ -238,23 +239,17 @@ def run_search(workload, ecfg: env_lib.EnvConfig,
     epoch_fn = make_epoch_fn(ecfg, pcfg, rcfg, env, opt)
 
     @functools.partial(jax.jit, static_argnames=("n",))
-    def run_chunk(state, n):
+    def scan_chunk(state, n):
         return jax.lax.scan(epoch_fn, state, None, length=n)
 
-    history = []
-    done = 0
-    while done < rcfg.epochs:
-        n = min(chunk, rcfg.epochs - done)
-        state, metrics = run_chunk(state, n)
-        h = jax.tree.map(jax.device_get, metrics)
-        history.append(h)
-        done += n
-        if on_chunk is not None:
-            on_chunk(state, h, done)
-    import numpy as np
+    def run_chunk(state, n):
+        state, metrics = scan_chunk(state, n)
+        return state, jax.tree.map(jax.device_get, metrics)
 
-    hist = {k: np.concatenate([h[k] for h in history]) for k in history[0]}
-    return state, hist
+    state, history = chunk_lib.drive(
+        state, rcfg.epochs, chunk, run_chunk, on_chunk,
+        engine="reinforce", evals_per_step=rcfg.episodes_per_epoch)
+    return state, chunk_lib.concat_hist_dict(history)
 
 
 def solution_arrays(state: SearchState, env: env_lib.EnvArrays):

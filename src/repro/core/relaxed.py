@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunk as chunk_lib
 from repro.core import env as env_lib
 from repro.costmodel import dataflows as dfl
 from repro.costmodel import maestro
@@ -267,38 +268,40 @@ def run_relaxed_search(workload, ecfg: env_lib.EnvConfig, eps: int = 100,
 
     n_var = min(max(int(cfg.topk), 0), len(_VARIANTS), eps - 1)
     rounds = eps - n_var
-    chunk = rounds if not chunk else max(int(chunk), 1)
-    hist = []
-    done = 0
-    while done < rounds:
-        n = min(chunk, rounds - done)
+
+    def run_round_chunk(state, n):
         h = np.empty((n,), np.float32)
         for s in range(n):
             state, pe_i, kt_i, df = round_fn(state)
             state = absorb(state, score(pe_i, kt_i, df), pe_i, kt_i, df)
             h[s] = np.float32(state.best_fit)
-        hist.append(h)
-        done += n
-        if on_chunk is not None:
-            on_chunk(state, h, done)
+        return state, h
+
+    state, hist = chunk_lib.drive(
+        state, rounds, chunk, run_round_chunk, on_chunk, engine="relaxed")
     if n_var:
         # Final budget: hard-score the floor/ceil rounding variants of the
         # best replica's continuous point (staircase landscapes often hide
-        # the optimum one cell off round-to-nearest).
+        # the optimum one cell off round-to-nearest).  One drive() chunk
+        # offset past the descent rounds so on_chunk sees the same `done`
+        # values as the old hand-rolled loop.
         pe_c, kt_c, df_w = best_continuous(state)
-        h = np.empty((n_var,), np.float32)
-        for i in range(n_var):
-            rp, rk = _VARIANTS[i]
-            pe_i, kt_i, df = _round_candidate(pe_c, kt_c, df_w,
-                                              ecfg.mix, ecfg.dataflow, rp, rk)
-            state = absorb(state, score(pe_i, kt_i, df), pe_i, kt_i, df)
-            h[i] = np.float32(state.best_fit)
-        hist.append(h)
-        done += n_var
-        if on_chunk is not None:
-            on_chunk(state, h, done)
-    return state, (np.concatenate(hist) if hist
-                   else np.empty((0,), np.float32))
+
+        def run_variant_chunk(state, n):
+            h = np.empty((n,), np.float32)
+            for i in range(n):
+                rp, rk = _VARIANTS[i]
+                pe_i, kt_i, df = _round_candidate(
+                    pe_c, kt_c, df_w, ecfg.mix, ecfg.dataflow, rp, rk)
+                state = absorb(state, score(pe_i, kt_i, df), pe_i, kt_i, df)
+                h[i] = np.float32(state.best_fit)
+            return state, h
+
+        state, vhist = chunk_lib.drive(
+            state, rounds + n_var, n_var, run_variant_chunk, on_chunk,
+            engine="relaxed", start=rounds)
+        hist.extend(vhist)
+    return state, chunk_lib.concat_hist(hist)
 
 
 def relaxed_solution(state: RelaxedState):

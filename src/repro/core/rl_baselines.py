@@ -20,6 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import chunk as chunk_lib
 from repro.core import env as env_lib
 from repro.core import policy as policy_lib
 from repro.core import reinforce
@@ -277,20 +278,14 @@ def run_ac_search(workload, ecfg: env_lib.EnvConfig,
         return new_state, metrics
 
     @functools.partial(jax.jit, static_argnames=("n",))
-    def run_chunk(state, n):
+    def scan_chunk(state, n):
         return jax.lax.scan(epoch_fn, state, None, length=n)
 
-    history = []
-    done = 0
-    while done < acfg.epochs:
-        n = min(chunk, acfg.epochs - done)
-        state, metrics = run_chunk(state, n)
-        h = jax.tree.map(jax.device_get, metrics)
-        history.append(h)
-        done += n
-        if on_chunk is not None:
-            on_chunk(state, h, done)
-    import numpy as np
+    def run_chunk(state, n):
+        state, metrics = scan_chunk(state, n)
+        return state, jax.tree.map(jax.device_get, metrics)
 
-    hist = {k: np.concatenate([h[k] for h in history]) for k in history[0]}
-    return state, hist
+    state, history = chunk_lib.drive(
+        state, acfg.epochs, chunk, run_chunk, on_chunk,
+        engine=acfg.algo, evals_per_step=acfg.episodes_per_epoch)
+    return state, chunk_lib.concat_hist_dict(history)

@@ -47,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.api import registry as api_registry
 from repro.api import types as api_types
+from repro.core import chunk as chunk_lib
 from repro.core import env as env_lib
 from repro.core import ga as ga_lib
 from repro.core import policy as policy_lib
@@ -231,12 +232,22 @@ def run_distributed_search(workload, ecfg: env_lib.EnvConfig, mesh,
     def one_epoch(state):
         return epoch_fn(state, alive)
 
-    history = {"best_value": [], "feasible_frac": []}
-    for _ in range(rcfg.epochs):
-        state, metrics = one_epoch(state)
-        for k in history:
-            history[k].append(float(metrics[k]))
-    history = {k: np.asarray(v) for k, v in history.items()}
+    def run_epochs(state, n):
+        vals = {"best_value": [], "feasible_frac": []}
+        for _ in range(n):
+            state, metrics = one_epoch(state)
+            for k in vals:
+                vals[k].append(float(metrics[k]))
+        return state, vals
+
+    # One chunk (chunk=0 -> full budget): nothing happens between epochs
+    # here, drive() only adds the span/metrics accounting.
+    state, chunks = chunk_lib.drive(
+        state, rcfg.epochs, 0, run_epochs, lambda *a: None,
+        engine="dist_reinforce",
+        evals_per_step=dcfg.episodes_per_device * n_dev)
+    history = {k: np.asarray([v for h in chunks for v in h[k]])
+               for k in chunks[0]}
     return state, history
 
 
@@ -331,21 +342,25 @@ def _fanout_reinforce_device(subs) -> list:
     # length would trigger a second fleet-wide compile).
     chunk = max(req0.progress_every // E, 1) if streaming else epochs
     t0 = time.time()
-    chunks = []
-    done = 0
-    while done < epochs:
-        n = min(chunk, epochs - done)
+
+    def drive_chunk(stacked, n):
         stacked, metrics = run_chunk(stacked, n)
-        h = jax.tree.map(jax.device_get, metrics)   # (n_shards, n) leaves
-        chunks.append(h)
-        done += n
-        if streaming:
-            best_now = np.asarray(stacked.best_value)
-            for s, sub in enumerate(subs):
-                sub.on_progress(api_types.Trial(
-                    min(done * E, sub.eps),
-                    float(np.min(h["best_value"][s])),
-                    float(best_now[s])))
+        # (n_shards, n) leaves
+        return stacked, jax.tree.map(jax.device_get, metrics)
+
+    def on_chunk(stacked, h, done):
+        if not streaming:
+            return
+        best_now = np.asarray(stacked.best_value)
+        for s, sub in enumerate(subs):
+            sub.on_progress(api_types.Trial(
+                min(done * E, sub.eps),
+                float(np.min(h["best_value"][s])),
+                float(best_now[s])))
+
+    stacked, chunks = chunk_lib.drive(
+        stacked, epochs, chunk, drive_chunk, on_chunk,
+        engine="dist_reinforce", evals_per_step=E * n_shards)
     hist = {k: np.concatenate([h[k] for h in chunks], axis=1)
             for k in chunks[0]}
 

@@ -161,6 +161,16 @@ def main(argv=None):
     ap.add_argument("--progress-every", type=int, default=0,
                     help="stream best-so-far every N samples (0 = off)")
     ap.add_argument("--out", default="")
+    ap.add_argument("--trace-out", default="",
+                    help="write a span trace here (.jsonl = one span per "
+                    "line, else Chrome-trace JSON for chrome://tracing / "
+                    "ui.perfetto.dev); enables telemetry")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry here (.prom text "
+                    "exposition, or .json snapshot); enables telemetry")
+    ap.add_argument("--profile", action="store_true",
+                    help="enable telemetry and print the flight-recorder "
+                    "summary even without --trace-out/--metrics-out")
     args = ap.parse_args(argv)
 
     try:
@@ -184,7 +194,23 @@ def main(argv=None):
             + f" best={t.best_value:.4e}",
             flush=True)
 
+    profile = bool(args.profile or args.trace_out or args.metrics_out)
+    if profile:
+        from repro import obs
+        obs.enable(trace=True)
+
     out = api.run_search(request)
+
+    if profile:
+        from repro import obs
+        print(out.summary(), flush=True)
+        if args.trace_out:
+            obs.save_trace(args.trace_out)
+            print(f"wrote {args.trace_out}", flush=True)
+        if args.metrics_out:
+            obs.write_prometheus(args.metrics_out)
+            print(f"wrote {args.metrics_out}", flush=True)
+        obs.disable()
 
     stage1 = out.extras.get("stage1_value")
     initial = out.extras.get("initial_valid_value")
@@ -207,6 +233,8 @@ def main(argv=None):
         "samples_to_convergence": out.samples_to_convergence,
         "wall_seconds": round(out.wall_seconds, 2),
     }
+    if out.telemetry is not None:
+        rec["telemetry"] = out.telemetry
     if out.frontier is not None:
         # Multi-objective methods: the latency-energy trade-off curve.
         rec["frontier"] = {

@@ -93,7 +93,21 @@ def main(argv=None):
     ap.add_argument("--progress", action="store_true",
                     help="stream per-request progress lines")
     ap.add_argument("--out", default="")
+    ap.add_argument("--trace-out", default="",
+                    help="write a span trace here (.jsonl = one span per "
+                    "line, else Chrome-trace JSON); enables telemetry")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry here (.prom text "
+                    "exposition, or .json snapshot); enables telemetry")
+    ap.add_argument("--profile", action="store_true",
+                    help="enable telemetry and print per-search "
+                    "flight-recorder summaries")
     args = ap.parse_args(argv)
+
+    profile = bool(args.profile or args.trace_out or args.metrics_out)
+    if profile:
+        from repro import obs
+        obs.enable(trace=True)
 
     if args.spec:
         with open(args.spec) as f:
@@ -122,11 +136,14 @@ def main(argv=None):
     for i, (t, spec) in enumerate(zip(tickets, specs)):
         try:
             out = t.result()
-            rows.append({"req": i, "workload": str(spec.get("workload")),
-                         "method": out.method, "seed": out.seed,
-                         "best_value": out.best_value,
-                         "feasible": out.feasible,
-                         "wall_seconds": round(t.wall_seconds, 2)})
+            row = {"req": i, "workload": str(spec.get("workload")),
+                   "method": out.method, "seed": out.seed,
+                   "best_value": out.best_value,
+                   "feasible": out.feasible,
+                   "wall_seconds": round(t.wall_seconds, 2)}
+            if out.telemetry is not None:
+                row["telemetry"] = out.telemetry
+            rows.append(row)
         except Exception as e:  # noqa: BLE001
             rows.append({"req": i, "status": t.status, "error": repr(e)})
     wall = time.time() - t0
@@ -149,6 +166,15 @@ def main(argv=None):
             1.0 - stats["fresh_points"] / max(stats["points"], 1), 4),
     }
     print(json.dumps(summary), flush=True)
+    if profile:
+        from repro import obs
+        if args.trace_out:
+            obs.save_trace(args.trace_out)
+            print(f"wrote {args.trace_out}", flush=True)
+        if args.metrics_out:
+            obs.write_prometheus(args.metrics_out)
+            print(f"wrote {args.metrics_out}", flush=True)
+        obs.disable()
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -40,6 +40,10 @@ import numpy as np
 from repro.core import env as env_lib
 from repro.costmodel import maestro
 from repro.costmodel.layers import NUM_FIELDS
+from repro.obs import instrument as obs_instrument
+from repro.obs import recorder as obs_recorder
+from repro.obs import state as obs_state
+from repro.obs import trace as obs_trace
 from repro.serving.cost_cache import CostMemoCache
 
 _PE_COL = NUM_FIELDS
@@ -100,7 +104,7 @@ class _Item:
     """One in-flight eval request: points + how to aggregate them."""
 
     __slots__ = ("points", "shape", "agg_key", "budget", "multi", "event",
-                 "fit", "error")
+                 "fit", "error", "recorder", "t_enqueue")
 
     def __init__(self, points, shape, agg_key, budget, multi=False):
         self.points = points          # (b*N, ROW_WIDTH) f32
@@ -111,6 +115,12 @@ class _Item:
         self.event = threading.Event()
         self.fit: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
+        # Telemetry attribution: the submitting search's flight recorder is
+        # captured at submit time (on the search worker's thread), so the
+        # dispatcher thread credits queue-wait / fuse / cache stats to the
+        # right search even when one dispatch fuses N searches' requests.
+        self.recorder = None
+        self.t_enqueue = 0.0
 
 
 class CostEvalBatcher:
@@ -186,10 +196,14 @@ class CostEvalBatcher:
         pe = np.asarray(pe, np.float32)
         points = pack_point_rows(layers, pe, kt, df)
         item = _Item(points, pe.shape, ecfg, np.float32(budget), multi=multi)
+        if obs_state.enabled:
+            item.recorder = obs_recorder.current_recorder()
+            item.t_enqueue = time.perf_counter()
         with self._cv:
             if self._closed:
                 raise RuntimeError("CostEvalBatcher is closed")
             self._pending.append(item)
+            obs_instrument.BATCHER_QUEUE_DEPTH.set(len(self._pending))
             self._cv.notify()
         item.event.wait()
         if item.error is not None:
@@ -199,7 +213,13 @@ class CostEvalBatcher:
     def stats(self) -> Dict[str, float]:
         with self._stats_lock:
             s = dict(self._stats)
-        s.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        cache = {f"cache_{k}": v for k, v in self.cache.stats().items()}
+        # The cache_ prefix must keep the two stat families disjoint: a
+        # batcher-native key that ever starts with cache_ would silently
+        # shadow (or be shadowed by) a cache stat in this merge.
+        overlap = set(s) & set(cache)
+        assert not overlap, f"batcher/cache stats keys collide: {overlap}"
+        s.update(cache)
         return s
 
     def close(self) -> None:
@@ -221,6 +241,7 @@ class CostEvalBatcher:
                 time.sleep(self._window_s)
             with self._cv:
                 items, self._pending = self._pending, []
+                obs_instrument.BATCHER_QUEUE_DEPTH.set(0)
             if not items:
                 continue
             with self._stats_lock:
@@ -239,13 +260,19 @@ class CostEvalBatcher:
                     self._active -= 1
 
     def _dispatch(self, items: List[_Item]) -> None:
+        t0 = time.perf_counter() if obs_state.enabled else 0.0
+        sp = obs_trace.span("batcher.dispatch").__enter__()
         rows = (items[0].points if len(items) == 1
                 else np.concatenate([it.points for it in items], axis=0))
         uniq, inv = np.unique(rows, axis=0, return_inverse=True)
         keys = [u.tobytes() for u in uniq]
         values, miss_index = self.cache.get_many(keys)
+        t_eval = 0.0
         if miss_index:
+            te = time.perf_counter() if obs_state.enabled else 0.0
             fresh = self._eval_points(uniq[miss_index])
+            if obs_state.enabled:
+                t_eval = time.perf_counter() - te
             # Cache per-row COPIES: a row view would pin the whole dispatch's
             # result array in memory for as long as any one point stays hot.
             self.cache.put_many([keys[i] for i in miss_index],
@@ -253,6 +280,11 @@ class CostEvalBatcher:
             for i, v in zip(miss_index, fresh):
                 values[i] = v
         per_point = np.stack(values)[inv]          # (P, 4)
+        sp.set(items=len(items), points=len(rows), unique=len(uniq),
+               fresh=len(miss_index)).__exit__(None, None, None)
+        if obs_state.enabled:
+            self._record_dispatch(items, t0, time.perf_counter() - t0,
+                                  t_eval, len(uniq), miss_index, inv)
 
         with self._stats_lock:
             s = self._stats
@@ -277,6 +309,43 @@ class CostEvalBatcher:
             it.fit = np.asarray(agg(jnp.asarray(vals), it.budget))
             it.event.set()
 
+    def _record_dispatch(self, items: List[_Item], t0: float, dt: float,
+                         t_eval: float, n_uniq: int, miss_index, inv) -> None:
+        """Telemetry for one finished dispatch: process-wide metrics plus
+        per-item flight-recorder attribution (each rider is credited its own
+        share of the fused batch, including its own cached-vs-fresh split via
+        the per-point miss mask)."""
+        n_points = sum(it.points.shape[0] for it in items)
+        obs_instrument.BATCHER_DISPATCHES.inc()
+        obs_instrument.BATCHER_POINTS.inc(n_points, kind="submitted")
+        obs_instrument.BATCHER_POINTS.inc(n_uniq, kind="unique")
+        obs_instrument.BATCHER_POINTS.inc(len(miss_index), kind="fresh")
+        obs_instrument.BATCHER_FUSE_WIDTH.observe(len(items))
+        obs_instrument.BATCHER_DISPATCH_SECONDS.observe(dt)
+        fresh_pp = None
+        if any(it.recorder is not None for it in items):
+            miss_mask = np.zeros(n_uniq, bool)
+            miss_mask[miss_index] = True
+            fresh_pp = miss_mask[inv]            # per submitted point
+        off = 0
+        for it in items:
+            n = it.points.shape[0]
+            wait = (t0 - it.t_enqueue) if it.t_enqueue else 0.0
+            obs_instrument.BATCHER_QUEUE_WAIT.observe(max(wait, 0.0))
+            rec = it.recorder
+            if rec is not None:
+                n_fresh = int(fresh_pp[off:off + n].sum())
+                rec.add("eval_batches")
+                rec.add("points", n)
+                rec.add("fresh_points", n_fresh)
+                rec.add("cached_points", n - n_fresh)
+                if it.t_enqueue:
+                    rec.observe("queue_wait_s", max(wait, 0.0))
+                rec.observe("dispatch_s", dt)
+                rec.observe("device_s", t_eval)
+                rec.observe("fuse_width", len(items))
+            off += n
+
     def _eval_points(self, rows: np.ndarray) -> np.ndarray:
         return eval_point_rows(rows, self._use_kernel)
 
@@ -299,11 +368,12 @@ def eval_point_rows(rows: np.ndarray, use_kernel: bool) -> np.ndarray:
         pad = np.ones((Mp - M, ROW_WIDTH), np.float32)
         pad[:, NUM_FIELDS - 1] = 0.0            # repeat=0: benign rows
         rp = np.concatenate([rows, pad], axis=0) if Mp > M else rows
-        lat, en, area, pw = ops.batched_cost_multi(
-            rp[:, :NUM_FIELDS].reshape(-1, TN, NUM_FIELDS),
-            rp[:, _PE_COL].reshape(-1, TN),
-            rp[:, _KT_COL].reshape(-1, TN),
-            rp[:, _DF_COL].reshape(-1, TN))
+        with obs_instrument.dispatch_span("cost_eval_kernel", key=Mp):
+            lat, en, area, pw = ops.batched_cost_multi(
+                rp[:, :NUM_FIELDS].reshape(-1, TN, NUM_FIELDS),
+                rp[:, _PE_COL].reshape(-1, TN),
+                rp[:, _KT_COL].reshape(-1, TN),
+                rp[:, _DF_COL].reshape(-1, TN))
         out = np.stack([np.asarray(lat), np.asarray(en),
                         np.asarray(area), np.asarray(pw)],
                        axis=-1).reshape(Mp, 4)
@@ -312,9 +382,11 @@ def eval_point_rows(rows: np.ndarray, use_kernel: bool) -> np.ndarray:
     Mp = _next_pow2(M)
     rp = np.ones((Mp, ROW_WIDTH), np.float32)
     rp[:M] = rows
-    out = _flat_cost(rp[:, :NUM_FIELDS], rp[:, _PE_COL],
-                     rp[:, _KT_COL], rp[:, _DF_COL])
-    return np.asarray(out)[:M]
+    with obs_instrument.dispatch_span("cost_eval_jnp", key=Mp):
+        out = _flat_cost(rp[:, :NUM_FIELDS], rp[:, _PE_COL],
+                         rp[:, _KT_COL], rp[:, _DF_COL])
+        out = np.asarray(out)
+    return out[:M]
 
 
 def pack_point_rows(layers: np.ndarray, pe, kt, df) -> np.ndarray:

@@ -25,11 +25,15 @@ instead of silently poisoning new searches.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from typing import Dict, Optional
 
 
 import numpy as np
+
+from repro.obs import instrument as obs_instrument
+from repro.obs import state as obs_state
 
 
 def model_version() -> str:
@@ -71,6 +75,7 @@ class CostMemoCache:
         ``keys`` (None where missing); ``miss_index`` the positions to
         evaluate.  Counts one hit/miss per key.
         """
+        t0 = time.perf_counter() if obs_state.enabled else 0.0
         values = []
         miss_index = []
         pre = self._vprefix
@@ -85,12 +90,22 @@ class CostMemoCache:
                     self.hits += 1
                     self._data.move_to_end(k)
                 values.append(v)
+        if obs_state.enabled:
+            obs_instrument.CACHE_LOOKUP_SECONDS.observe(
+                time.perf_counter() - t0)
+            n_miss = len(miss_index)
+            if n_miss:
+                obs_instrument.CACHE_LOOKUPS.inc(n_miss, result="miss")
+            if len(values) - n_miss:
+                obs_instrument.CACHE_LOOKUPS.inc(
+                    len(values) - n_miss, result="hit")
         return values, miss_index
 
     def put_many(self, keys, vals: np.ndarray) -> None:
         """Insert key->(4,) rows; evicts least-recently-used past capacity."""
         pre = self._vprefix
         with self._lock:
+            ev0 = self.evictions
             for k, v in zip(keys, vals):
                 k = pre + k
                 self._data[k] = v
@@ -98,6 +113,9 @@ class CostMemoCache:
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
                 self.evictions += 1
+            evicted = self.evictions - ev0
+        if evicted and obs_state.enabled:
+            obs_instrument.CACHE_EVICTIONS.inc(evicted)
 
     @property
     def hit_rate(self) -> float:

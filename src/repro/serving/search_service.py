@@ -56,6 +56,9 @@ import numpy as np
 from repro.api import registry as api_registry
 from repro.api import types as api_types
 from repro.core import env as env_lib
+from repro.obs import instrument as obs_instrument
+from repro.obs import state as obs_state
+from repro.obs import trace as obs_trace
 from repro.serving.batcher import CostEvalBatcher
 from repro.serving.cost_cache import CostMemoCache
 
@@ -186,7 +189,10 @@ class SearchService:
     def stats(self) -> Dict[str, float]:
         with self._lock:
             s = dict(self._counts)
-        s.update(self.batcher.stats())
+        b = self.batcher.stats()
+        overlap = set(s) & set(b)
+        assert not overlap, f"service/batcher stats keys collide: {overlap}"
+        s.update(b)
         return s
 
     def close(self) -> None:
@@ -202,6 +208,9 @@ class SearchService:
 
     # -- worker -------------------------------------------------------------
     def _run(self, ticket: SearchTicket) -> None:
+        obs_instrument.SERVICE_ACTIVE.inc()
+        sp = obs_trace.span("service.search", uid=ticket.uid,
+                            method=ticket.request.method).__enter__()
         try:
             if ticket.cancelled:
                 raise SearchCancelled(f"search {ticket.uid} cancelled")
@@ -216,6 +225,11 @@ class SearchService:
         except BaseException as e:  # noqa: BLE001 -- reported via ticket
             ticket._finish("failed", error=e)
             key = "failed"
+        finally:
+            obs_instrument.SERVICE_ACTIVE.dec()
+        sp.set(status=key).__exit__(None, None, None)
+        if obs_state.enabled:
+            obs_instrument.SERVICE_REQUESTS.inc(status=key)
         with self._lock:
             self._counts[key] += 1
 

@@ -1,0 +1,371 @@
+"""The ``repro.obs`` telemetry layer: metrics registry, tracer, flight
+recorder, batcher/cache instrumentation, and the docs catalog sync.
+
+Byte-identity of instrumented vs plain searches is covered registry-wide in
+tests/test_optimizer_conformance.py::test_telemetry_is_observational; this
+file unit-tests the obs primitives themselves plus the serving-stack
+accounting (including a multi-thread batcher hammer with exact counter
+assertions).
+"""
+import importlib.util
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.core import env as env_lib
+from repro.costmodel import workloads
+from repro.obs import instrument, metrics, recorder, state as obs_state
+from repro.obs import trace as trace_mod
+from repro.serving.batcher import CostEvalBatcher
+from repro.serving.cost_cache import CostMemoCache
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ECFG = env_lib.EnvConfig(platform="cloud")
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Telemetry is process-global: every test starts and ends disabled
+    with zeroed metrics, whatever it does in between."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+def _enabled():
+    obs.enable(trace=True)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry.
+# ---------------------------------------------------------------------------
+def test_counter_counts_and_is_gated():
+    c = metrics.counter("t_obs_counter", "x", labels=("k",))
+    c.inc(k="a")                      # disabled -> dropped
+    assert c.value(k="a") == 0.0
+    _enabled()
+    c.inc(k="a")
+    c.inc(2.5, k="a")
+    c.inc(k="b")
+    assert c.value(k="a") == 3.5 and c.value(k="b") == 1.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0, k="a")            # counters only go up
+    with pytest.raises(ValueError):
+        c.inc(wrong="label")
+
+
+def test_gauge_up_down():
+    g = metrics.gauge("t_obs_gauge", "x")
+    _enabled()
+    g.set(5.0)
+    g.inc()
+    g.dec(2.0)
+    assert g.value() == 4.0
+
+
+def test_histogram_stats_and_buckets():
+    h = metrics.histogram("t_obs_hist", "x", buckets=(1.0, 10.0))
+    _enabled()
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    st = h.stats()
+    assert st["count"] == 3 and st["max"] == 50.0
+    assert st["sum"] == pytest.approx(55.5)
+    # Exposition: cumulative le buckets ending at +Inf == _count.
+    text = obs.REGISTRY.prometheus_text()
+    assert 't_obs_hist_bucket{le="1.0"} 1' in text
+    assert 't_obs_hist_bucket{le="10.0"} 2' in text
+    assert 't_obs_hist_bucket{le="+Inf"} 3' in text
+    assert "t_obs_hist_count 3" in text
+
+
+def test_registry_get_or_create_and_conflicts():
+    a = metrics.counter("t_obs_same", "x", labels=("k",))
+    b = metrics.counter("t_obs_same", "x", labels=("k",))
+    assert a is b
+    with pytest.raises(ValueError):
+        metrics.gauge("t_obs_same")                   # kind conflict
+    with pytest.raises(ValueError):
+        metrics.counter("t_obs_same", labels=("other",))   # label conflict
+
+
+def test_counters_expose_total_suffix_and_reset_zeroes():
+    c = metrics.counter("t_obs_totaled", "x")
+    _enabled()
+    c.inc(3)
+    text = obs.REGISTRY.prometheus_text()
+    assert "t_obs_totaled_total 3.0" in text
+    assert "\nt_obs_totaled 3.0" not in text          # only the _total form
+    snap = obs.REGISTRY.snapshot()["t_obs_totaled"]
+    assert snap["kind"] == "counter" and snap["values"][""] == 3.0
+    obs.REGISTRY.reset()
+    assert c.value() == 0.0
+
+
+def test_exposition_passes_the_telemetry_checker(tmp_path):
+    """The registry's own output must satisfy tools/check_telemetry.py --
+    the exact validation CI runs on real artifacts."""
+    spec = importlib.util.spec_from_file_location(
+        "check_telemetry", os.path.join(REPO, "tools", "check_telemetry.py"))
+    checker = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(checker)
+
+    _enabled()
+    instrument.SEARCH_HARD_EVALS.inc(100, engine="ga")
+    instrument.SEARCH_CHUNK_SECONDS.observe(0.5, engine="ga")
+    instrument.BATCHER_QUEUE_DEPTH.set(3)
+    path = tmp_path / "m.prom"
+    obs.write_prometheus(str(path))
+    n = checker.check_metrics(str(path), ["repro_search_hard_evals"])
+    assert n > 0
+
+
+# ---------------------------------------------------------------------------
+# Tracer.
+# ---------------------------------------------------------------------------
+def test_spans_nest_with_depth_and_parent():
+    t = trace_mod.Tracer()
+    with t.span("outer", k=1):
+        with t.span("inner"):
+            pass
+    inner, outer = t.spans()
+    assert inner["name"] == "inner" and inner["depth"] == 1
+    assert inner["parent"] == "outer"
+    assert outer["name"] == "outer" and outer["depth"] == 0
+    assert "parent" not in outer
+    assert outer["attrs"] == {"k": 1}
+    assert outer["dur_us"] >= inner["dur_us"] >= 0
+
+
+def test_ring_bounds_and_counts_drops():
+    t = trace_mod.Tracer(ring=2)
+    for i in range(5):
+        with t.span(f"s{i}"):
+            pass
+    assert [r["name"] for r in t.spans()] == ["s3", "s4"]
+    assert t.dropped == 3
+
+
+def test_disabled_span_is_the_shared_null(tmp_path):
+    assert trace_mod.span("x") is trace_mod.NULL_SPAN
+    with trace_mod.span("x", a=1) as sp:
+        assert sp.set(b=2) is sp      # chaining-safe on the disabled path
+    _enabled()
+    with trace_mod.span("real") as sp:
+        assert sp is not trace_mod.NULL_SPAN
+
+
+def test_jsonl_sink_and_chrome_export(tmp_path):
+    jsonl = tmp_path / "t.jsonl"
+    t = trace_mod.Tracer(jsonl_path=str(jsonl))
+    with t.span("a", n=3):
+        pass
+    t.close()
+    recs = [json.loads(ln) for ln in jsonl.read_text().splitlines()]
+    assert len(recs) == 1 and recs[0]["name"] == "a"
+    assert recs[0]["attrs"] == {"n": 3}
+    ct = t.chrome_trace()
+    (ev,) = ct["traceEvents"]
+    assert ev["ph"] == "X" and ev["name"] == "a" and ev["dur"] >= 0
+    # save() picks the format from the extension.
+    out = tmp_path / "t.json"
+    t.save(str(out))
+    assert json.loads(out.read_text())["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder.
+# ---------------------------------------------------------------------------
+def test_recorder_summary_counts_series_and_ratios():
+    r = recorder.FlightRecorder(engine="ga")
+    r.add("points", 10)
+    r.add("cached_points", 4)
+    r.add("fresh_points", 6)
+    r.observe("dispatch_s", 0.2)
+    r.observe("dispatch_s", 0.4)
+    s = r.summary()
+    assert s["engine"] == "ga" and s["points"] == 10
+    assert s["cache_hit_rate"] == pytest.approx(0.4)
+    assert s["fresh_frac"] == pytest.approx(0.6)
+    d = s["dispatch_s"]
+    assert d["count"] == 2 and d["max"] == pytest.approx(0.4)
+    assert d["mean"] == pytest.approx(0.3)
+
+
+def test_recording_is_thread_local_and_gated():
+    r = recorder.FlightRecorder()
+    recorder.record("k")              # no recorder, disabled -> no-op
+    _enabled()
+    with recorder.recording(r):
+        recorder.record("k", 2)
+        seen = []
+        th = threading.Thread(
+            target=lambda: seen.append(recorder.current_recorder()))
+        th.start()
+        th.join()
+        assert seen == [None]         # other threads see no recorder
+    recorder.record("k")              # uninstalled again
+    assert r.count("k") == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Dispatch/compile tracking.
+# ---------------------------------------------------------------------------
+def test_dispatch_span_counts_first_sighting_as_compile():
+    _enabled()
+    rec = recorder.FlightRecorder()
+    with recorder.recording(rec):
+        for _ in range(3):
+            with instrument.dispatch_span("t_prog", key=256):
+                pass
+        with instrument.dispatch_span("t_prog", key=512):
+            pass
+    assert instrument.JIT_COMPILES.value(program="t_prog") == 2.0
+    assert instrument.DISPATCH_SECONDS.stats(program="t_prog")["count"] == 4
+    assert rec.count("jit_compiles") == 2.0
+    spans = [s for s in obs.tracer().spans() if s["name"] == "xla.dispatch"]
+    assert [s["attrs"]["compile"] for s in spans] == [
+        True, False, False, True]
+
+
+def test_hard_evals_helper_feeds_registry_and_recorder():
+    instrument.hard_evals("random", 50)      # disabled -> free no-op
+    assert instrument.SEARCH_HARD_EVALS.value(engine="random") == 0.0
+    _enabled()
+    rec = recorder.FlightRecorder()
+    with recorder.recording(rec):
+        instrument.hard_evals("random", 50)
+    assert instrument.SEARCH_HARD_EVALS.value(engine="random") == 50.0
+    assert rec.count("hard_evals") == 50.0
+
+
+# ---------------------------------------------------------------------------
+# Cache + batcher accounting.
+# ---------------------------------------------------------------------------
+def test_empty_cache_hit_rate_is_zero():
+    cache = CostMemoCache()
+    assert cache.hit_rate == 0.0
+    assert cache.stats()["hit_rate"] == 0.0
+
+
+def test_batcher_cache_stats_merge_asserts_disjoint_keys():
+    b = CostEvalBatcher()
+    try:
+        s = b.stats()
+        assert s["cache_hits"] == 0           # cache_ namespaced in
+        assert "dispatches" in s
+        # A batcher-native key colliding with the cache_ namespace must
+        # fail loudly, not silently shadow.
+        with b._stats_lock:
+            b._stats["cache_hits"] = 99
+        with pytest.raises(AssertionError):
+            b.stats()
+    finally:
+        with b._stats_lock:
+            b._stats.pop("cache_hits", None)
+        b.close()
+
+
+def test_batcher_hammer_exact_counters_and_attribution():
+    """Satellite: N searches hammer one batcher from worker threads; every
+    process-wide counter and per-search flight-recorder count must come out
+    exact (no lost updates), and concurrency stays within the pool."""
+    _enabled()
+    env = env_lib.make_env(workloads.get_workload("ncf"), ECFG)
+    layers = np.asarray(env.layers, np.float32)
+    N = layers.shape[0]
+    T, K, B = 4, 3, 8            # threads x submits x genomes-per-submit
+    workers = 2
+    b = CostEvalBatcher(window_ms=1.0, use_kernel=False,
+                        dispatch_workers=workers)
+    recs = [recorder.FlightRecorder(engine=f"t{i}") for i in range(T)]
+    fits = [None] * T
+    errors = []
+
+    def worker(i):
+        rng = np.random.default_rng(i)
+        try:
+            with recorder.recording(recs[i]):
+                out = []
+                for _ in range(K):
+                    pe = rng.integers(1, 64, (B, N)).astype(np.float32)
+                    kt = rng.integers(1, 64, (B, N)).astype(np.float32)
+                    out.append(b.evaluate(layers, pe, kt, 0.0, ECFG,
+                                          env.budget))
+                fits[i] = out
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    try:
+        assert not errors
+        s = b.stats()
+        assert s["items"] == T * K
+        assert s["points"] == T * K * B * N
+        assert 1 <= s["dispatches"] <= T * K
+        # The cache is consulted once per unique row per dispatch.
+        assert s["cache_hits"] + s["cache_misses"] == s["unique_points"]
+        assert s["fresh_points"] == s["cache_misses"]
+        assert s["max_concurrent_dispatches"] <= workers
+        assert s["dispatch_workers"] == workers
+
+        # Process-wide metrics agree with the batcher's own ledger.
+        pts = instrument.BATCHER_POINTS
+        assert pts.value(kind="submitted") == s["points"]
+        assert pts.value(kind="unique") == s["unique_points"]
+        assert pts.value(kind="fresh") == s["fresh_points"]
+        assert instrument.BATCHER_DISPATCHES.value() == s["dispatches"]
+        assert instrument.BATCHER_FUSE_WIDTH.stats()["count"] == \
+            s["dispatches"]
+        assert instrument.BATCHER_QUEUE_WAIT.stats()["count"] == T * K
+
+        # Per-search attribution: each rider credited exactly its share.
+        for r in recs:
+            t = r.summary()
+            assert t["eval_batches"] == K
+            assert t["points"] == K * B * N
+            assert t["fresh_points"] + t["cached_points"] == t["points"]
+            assert t["queue_wait_s"]["count"] == K
+        assert sum(r.count("fresh_points") for r in recs) == \
+            s["fresh_points"]
+
+        # Sanity: results are real fitness vectors.
+        for out in fits:
+            assert len(out) == K and all(f.shape == (B,) for f in out)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# Outcome summary + docs catalog sync.
+# ---------------------------------------------------------------------------
+def test_outcome_summary_renders_telemetry():
+    req = api.SearchRequest(workload="ncf", env=ECFG, eps=20, seed=3,
+                            method="random")
+    plain = api.run_search(req)
+    text = plain.summary()
+    assert "method=random" in text and "seed=3" in text
+    assert f"best_value={plain.best_value:.6g}" in text
+    assert "telemetry" not in text
+    _enabled()
+    traced = api.run_search(req)
+    text = traced.summary()
+    assert "telemetry: " in text and "hard_evals=20" in text
+
+
+def test_docs_document_every_metric_and_span():
+    doc = open(os.path.join(REPO, "docs", "observability.md")).read()
+    for name in instrument.METRIC_NAMES:
+        assert f"`{name}`" in doc, f"{name} missing from docs/observability.md"
+    for name in instrument.SPAN_NAMES:
+        assert f"`{name}`" in doc, f"{name} missing from docs/observability.md"

@@ -130,3 +130,29 @@ def test_chunked_engines_stream_before_completion(method):
                         progress_every=max(eps // 3, 1)))
     assert len(trials) >= 2
     assert trials[0].step < eps
+
+
+@pytest.mark.parametrize("method", sorted(CASES))
+def test_telemetry_is_observational(method):
+    """Registry-wide byte-identity: enabling ``repro.obs`` telemetry never
+    changes a search result.  The instrumented run must also come back with
+    a populated ``outcome.telemetry`` (hard-eval accounting at minimum)."""
+    from repro import obs
+
+    plain = api.run_search(_req(method))
+    obs.reset()
+    obs.enable(trace=True)
+    try:
+        instrumented = api.run_search(_req(method))
+    finally:
+        obs.disable()
+
+    assert plain.best_value == instrumented.best_value
+    assert plain.history.tobytes() == instrumented.history.tobytes()
+    assert plain.pe.tobytes() == instrumented.pe.tobytes()
+    assert plain.kt.tobytes() == instrumented.kt.tobytes()
+    assert plain.df.tobytes() == instrumented.df.tobytes()
+    assert plain.telemetry is None
+    t = instrumented.telemetry
+    assert t is not None and t["engine"] == method
+    assert t.get("hard_evals", 0) > 0, t
