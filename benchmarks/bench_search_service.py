@@ -13,7 +13,12 @@ through the cross-request batcher like everyone else.  We measure:
   * service   -- the same requests through :class:`SearchService` with the
                  single-thread fused dispatcher (the PR-3 configuration);
   * service (pool) -- the same service with ``dispatch_workers > 1``: up to
-                 N fused dispatches execute concurrently.
+                 N fused dispatches execute concurrently;
+  * persistent restart -- a service with ``cache_dir`` set runs the mix
+                 cold (writing cache shards), closes, and a FRESH service
+                 on the same directory reruns it: the warm-restart wave
+                 must evaluate zero fresh points (100% hit rate straight
+                 from disk) while staying bit-identical.
 
 Every outcome is asserted bit-identical across all paths (the service is an
 execution strategy, not an approximation).  Reported: wall-clock speedup,
@@ -143,6 +148,29 @@ def run(budget_name: str = "quick") -> dict:
     _assert_identical(serial, pool_cold, exact)
     _assert_identical(serial, pool_warm, exact)
 
+    # Persistent-cache restart: same mix, cold service writes shards on
+    # close; a brand-new service on the same cache_dir serves the whole
+    # rerun from disk (zero fresh evaluations, still bit-identical).
+    import tempfile
+
+    cache_dir = tempfile.mkdtemp(prefix="repro-bench-cache-")
+    pers1 = SearchService(ServiceConfig(max_workers=n_users,
+                                        cache_dir=cache_dir))
+    with common.Timer() as t_pers_cold:
+        pers_cold = pers1.run_all(_mix(eps, n_users))
+    stats_pers_cold = pers1.stats()
+    pers1.close()
+    pers2 = SearchService(ServiceConfig(max_workers=n_users,
+                                        cache_dir=cache_dir))
+    with common.Timer() as t_pers_warm:
+        pers_warm = pers2.run_all(_mix(eps, n_users))
+    stats_pers_warm = pers2.stats()
+    pers2.close()
+    _assert_identical(serial, pers_cold, exact)
+    _assert_identical(serial, pers_warm, exact)
+    assert stats_pers_warm["cache_misses"] == 0, \
+        f"warm restart missed {stats_pers_warm['cache_misses']} points"
+
     def warm_rate(warm_stats, cold_stats):
         hits = warm_stats["cache_hits"] - cold_stats["cache_hits"]
         misses = warm_stats["cache_misses"] - cold_stats["cache_misses"]
@@ -163,6 +191,12 @@ def run(budget_name: str = "quick") -> dict:
          t_serial.seconds / t_pool_warm.seconds,
          n_users / t_pool_warm.seconds,
          warm_rate(stats_pool, stats_pool_cold)],
+        ["persistent (cold, writes shards)", t_pers_cold.seconds,
+         t_serial.seconds / t_pers_cold.seconds,
+         n_users / t_pers_cold.seconds, stats_pers_cold["cache_hit_rate"]],
+        ["persistent (warm RESTART)", t_pers_warm.seconds,
+         t_serial.seconds / t_pers_warm.seconds,
+         n_users / t_pers_warm.seconds, stats_pers_warm["cache_hit_rate"]],
     ]
     common.print_table(
         f"Search service: {n_users} concurrent searches (incl. ga/sa), "
@@ -212,6 +246,16 @@ def run(budget_name: str = "quick") -> dict:
         "searches_per_sec_pool_warm": n_users / t_pool_warm.seconds,
         "cache_hit_rate_cold": stats_cold["cache_hit_rate"],
         "cache_hit_rate_warm_wave": warm_rate(stats_warm, stats_cold),
+        "persistent_cold_seconds": t_pers_cold.seconds,
+        "persistent_warm_restart_seconds": t_pers_warm.seconds,
+        "speedup_persistent_warm_restart":
+            t_serial.seconds / t_pers_warm.seconds,
+        "persistent_warm_restart_hit_rate":
+            stats_pers_warm["cache_hit_rate"],
+        "persistent_warm_restart_fresh_points":
+            stats_pers_warm["fresh_points"],
+        "persistent_entries_loaded": stats_pers_warm["cache_entries"],
+        "persistent_shards_loaded": stats_pers_warm["cache_shards_loaded"],
         "max_concurrent_dispatches_pool":
             stats_pool["max_concurrent_dispatches"],
         "outcomes_identical": True,

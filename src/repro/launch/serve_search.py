@@ -90,6 +90,9 @@ def main(argv=None):
     ap.add_argument("--dispatch-workers", type=int, default=1,
                     help="fused-dispatch pool size in the cost-eval batcher")
     ap.add_argument("--window-ms", type=float, default=2.0)
+    ap.add_argument("--cache-dir", default="",
+                    help="persist the cost memo cache here (versioned "
+                    "shard files); warm restarts reload it")
     ap.add_argument("--progress", action="store_true",
                     help="stream per-request progress lines")
     ap.add_argument("--out", default="")
@@ -121,7 +124,8 @@ def main(argv=None):
           flush=True)
     svc = SearchService(ServiceConfig(max_workers=args.workers,
                                       window_ms=args.window_ms,
-                                      dispatch_workers=args.dispatch_workers))
+                                      dispatch_workers=args.dispatch_workers,
+                                      cache_dir=args.cache_dir or None))
     t0 = time.time()
     tickets = []
     for i, r in enumerate(requests):

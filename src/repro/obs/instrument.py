@@ -71,6 +71,15 @@ SERVICE_REQUESTS = _metrics.counter(
     "repro_service_requests", "Search tickets finished",
     labels=("status",))   # status: completed|cancelled|failed
 
+HTTP_REQUESTS = _metrics.counter(
+    "repro_http_requests", "HTTP front-door requests served",
+    labels=("route", "code"))   # route is the template, not the raw path
+HTTP_REQUEST_SECONDS = _metrics.histogram(
+    "repro_http_request_seconds", "HTTP request handling wall-clock",
+    labels=("route",))
+HTTP_QUEUE_DEPTH = _metrics.gauge(
+    "repro_http_queue_depth", "Front-door jobs awaiting a worker slot")
+
 METRIC_NAMES = tuple(sorted(
     m.name for m in _metrics.REGISTRY.metrics()))
 

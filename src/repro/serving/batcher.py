@@ -145,9 +145,11 @@ class CostEvalBatcher:
     def __init__(self, cache: Optional[CostMemoCache] = None,
                  window_ms: float = 2.0,
                  use_kernel: Optional[bool] = None,
-                 dispatch_workers: int = 1):
+                 dispatch_workers: int = 1,
+                 join_timeout_s: float = 5.0):
         self.cache = cache if cache is not None else CostMemoCache()
         self._window_s = max(window_ms, 0.0) / 1e3
+        self._join_timeout_s = float(join_timeout_s)
         self._use_kernel = (use_kernel if use_kernel is not None
                             else jax.default_backend() == "tpu")
         self._pending: List[_Item] = []
@@ -161,6 +163,7 @@ class CostEvalBatcher:
             "max_items_per_dispatch": 0, "max_points_per_dispatch": 0,
             "dispatch_workers": max(int(dispatch_workers), 1),
             "max_concurrent_dispatches": 0,
+            "leaked_dispatch_threads": 0,
         }
         self._threads = [
             threading.Thread(target=self._loop,
@@ -226,8 +229,27 @@ class CostEvalBatcher:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+        leaked = 0
         for t in self._threads:
-            t.join(timeout=5.0)
+            t.join(timeout=self._join_timeout_s)
+            # join() returning proves nothing by itself: with a timeout it
+            # returns whether or not the thread died.  A still-alive worker
+            # is hung inside a dispatch -- it will never drain _pending, so
+            # every queued waiter would block forever if we stayed silent.
+            if t.is_alive():
+                leaked += 1
+        if leaked:
+            with self._cv:
+                stranded, self._pending = self._pending, []
+            err = RuntimeError(
+                f"CostEvalBatcher closed with {leaked} hung dispatch "
+                f"thread(s); pending evaluations abandoned")
+            for it in stranded:
+                if not it.event.is_set():
+                    it.error = err
+                    it.event.set()
+        with self._stats_lock:
+            self._stats["leaked_dispatch_threads"] = leaked
 
     # -- dispatcher side ----------------------------------------------------
     def _loop(self) -> None:
@@ -313,8 +335,14 @@ class CostEvalBatcher:
                          t_eval: float, n_uniq: int, miss_index, inv) -> None:
         """Telemetry for one finished dispatch: process-wide metrics plus
         per-item flight-recorder attribution (each rider is credited its own
-        share of the fused batch, including its own cached-vs-fresh split via
-        the per-point miss mask)."""
+        share of the fused batch, including its own cached-vs-fresh split).
+
+        Fresh credit is *first-claim*: when several submitted points (same
+        item or different riders) collapse onto one fresh unique row, only
+        the first submitted occurrence is credited ``fresh`` -- the rest
+        ride the same evaluation and count ``cached``.  That keeps
+        ``sum(per-rider fresh) == dispatcher fresh_points`` exact instead
+        of drifting whenever duplicates happen to fuse."""
         n_points = sum(it.points.shape[0] for it in items)
         obs_instrument.BATCHER_DISPATCHES.inc()
         obs_instrument.BATCHER_POINTS.inc(n_points, kind="submitted")
@@ -324,9 +352,11 @@ class CostEvalBatcher:
         obs_instrument.BATCHER_DISPATCH_SECONDS.observe(dt)
         fresh_pp = None
         if any(it.recorder is not None for it in items):
-            miss_mask = np.zeros(n_uniq, bool)
-            miss_mask[miss_index] = True
-            fresh_pp = miss_mask[inv]            # per submitted point
+            inv = np.asarray(inv).ravel()
+            first = np.full(n_uniq, len(inv), dtype=np.int64)
+            np.minimum.at(first, inv, np.arange(len(inv)))
+            fresh_pp = np.zeros(len(inv), bool)   # per submitted point
+            fresh_pp[first[miss_index]] = True    # first claimant only
         off = 0
         for it in items:
             n = it.points.shape[0]

@@ -44,12 +44,13 @@ Typical use::
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import itertools
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,11 +61,32 @@ from repro.obs import instrument as obs_instrument
 from repro.obs import state as obs_state
 from repro.obs import trace as obs_trace
 from repro.serving.batcher import CostEvalBatcher
-from repro.serving.cost_cache import CostMemoCache
+from repro.serving.cost_cache import CostMemoCache, PersistentCostCache
 
 
 class SearchCancelled(Exception):
     """Raised inside a worker when its ticket was cancelled mid-search."""
+
+
+def _clone_exception(err: BaseException) -> BaseException:
+    """Per-caller copy of a stored exception.
+
+    ``raise`` assigns ``__traceback__`` on the raised *object*, so re-raising
+    one shared instance from concurrent ``result()`` callers would let them
+    mutate each other's tracebacks mid-flight.  Each caller gets a fresh
+    copy chained (``__cause__``) to the original, whose worker-side traceback
+    stays pinned.  Exceptions that defeat ``copy`` (exotic constructors)
+    fall back to the shared instance -- correctness over isolation.
+    """
+    try:
+        clone = copy.copy(err)
+    except Exception:  # noqa: BLE001 -- uncopyable exception type
+        return err
+    if clone is err:   # a __copy__ that returns self defeats the point
+        return err
+    clone.__traceback__ = None
+    clone.__cause__ = err
+    return clone
 
 
 # Methods whose host-side eval loop accepts an injected genome-level
@@ -101,6 +123,10 @@ class ServiceConfig:
     dispatch_workers: int = 1     # fused-dispatch pool size (batcher threads)
     default_progress_every: int = 200   # service-side chunking when the
     #                                     request carries no callback
+    cache_dir: Optional[str] = None     # persistent CostMemoCache root; the
+    #                                     memo then survives restarts and is
+    #                                     shared across processes
+    cache_flush_every: int = 4096       # fresh entries buffered per shard
 
 
 class SearchTicket:
@@ -117,11 +143,32 @@ class SearchTicket:
         self._error: Optional[BaseException] = None
         self._done = threading.Event()
         self._cancel = threading.Event()
+        # Lifecycle lock: serializes the queued -> running claim against
+        # cancel()'s queued -> cancelled claim, so exactly one side finishes
+        # a ticket and a still-queued cancel completes IMMEDIATELY instead
+        # of waiting for a saturated pool to dequeue work it will only
+        # throw away.
+        self._state_lock = threading.Lock()
+        self._started = False
+        self._callbacks: List[Callable[["SearchTicket"], None]] = []
 
     # -- client side --------------------------------------------------------
     def cancel(self) -> None:
-        """Request cancellation; takes effect at the next chunk/batch."""
+        """Request cancellation.
+
+        A still-queued ticket finishes right here (status ``cancelled``,
+        ``result()`` unblocked) -- the worker pool later skips it.  A
+        running ticket observes the flag at its next chunk/batch.
+        """
         self._cancel.set()
+        with self._state_lock:
+            if self._started or self._done.is_set():
+                return   # running (flag observed at next chunk) or finished
+            callbacks = self._finish_locked(
+                "cancelled",
+                error=SearchCancelled(f"search {self.uid} cancelled"))
+        for fn in callbacks:
+            fn(self)
 
     @property
     def cancelled(self) -> bool:
@@ -136,16 +183,47 @@ class SearchTicket:
         if not self._done.wait(timeout):
             raise TimeoutError(f"search {self.uid} still running")
         if self._error is not None:
-            raise self._error
+            raise _clone_exception(self._error)
         return self._outcome
 
+    def add_done_callback(self, fn: Callable[["SearchTicket"], None]) -> None:
+        """Run ``fn(ticket)`` when the ticket finishes (immediately if it
+        already has).  Callbacks run on whichever thread finishes the
+        ticket and must not block."""
+        with self._state_lock:
+            if not self._done.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
     # -- service side -------------------------------------------------------
-    def _finish(self, status: str, outcome=None, error=None) -> None:
+    def _begin(self) -> bool:
+        """Worker-side claim: queued -> running.  False when the ticket was
+        already finished (cancelled while queued) -- the worker must skip."""
+        with self._state_lock:
+            if self._done.is_set():
+                return False
+            self._started = True
+            self.status = "running"
+            return True
+
+    def _finish(self, status: str, outcome=None, error=None) -> bool:
+        with self._state_lock:
+            if self._done.is_set():
+                return False
+            callbacks = self._finish_locked(status, outcome, error)
+        for fn in callbacks:
+            fn(self)
+        return True
+
+    def _finish_locked(self, status: str, outcome=None, error=None) -> list:
         self.status = status
         self._outcome = outcome
         self._error = error
         self.wall_seconds = time.time() - self.submitted_at
+        callbacks, self._callbacks = self._callbacks, []
         self._done.set()
+        return callbacks
 
 
 class SearchService:
@@ -153,7 +231,12 @@ class SearchService:
 
     def __init__(self, cfg: ServiceConfig = ServiceConfig()):
         self.cfg = cfg
-        self.cache = CostMemoCache(cfg.cache_entries)
+        if cfg.cache_dir:
+            self.cache: CostMemoCache = PersistentCostCache(
+                cfg.cache_dir, cfg.cache_entries,
+                flush_every=cfg.cache_flush_every)
+        else:
+            self.cache = CostMemoCache(cfg.cache_entries)
         self.batcher = CostEvalBatcher(self.cache, window_ms=cfg.window_ms,
                                        use_kernel=cfg.use_kernel,
                                        dispatch_workers=cfg.dispatch_workers)
@@ -172,12 +255,27 @@ class SearchService:
     # -- public API ---------------------------------------------------------
     def submit(self, request: api_types.SearchRequest) -> SearchTicket:
         """Enqueue one search; returns immediately with a ticket."""
-        if self._closed:
-            raise RuntimeError("SearchService is closed")
         ticket = SearchTicket(next(self._uids), request)
+        # Check-and-submit under the lock: close() flips _closed under the
+        # same lock BEFORE shutting the pool down, so a submit that passed
+        # the check has already handed its work to a live executor.  An
+        # unlocked check raced close() -- submit could count the ticket,
+        # then hit the shut-down pool's RuntimeError and leak a ticket
+        # whose result() blocked forever.
         with self._lock:
+            if self._closed:
+                raise RuntimeError("SearchService is closed")
             self._counts["submitted"] += 1
-        self._pool.submit(self._run, ticket)
+            try:
+                self._pool.submit(self._run, ticket)
+            except RuntimeError as e:   # belt-and-braces: pool rejected it
+                ticket._finish("failed", error=e)
+                self._counts["failed"] += 1
+                return ticket
+        # Registered after release so a callback firing immediately (the
+        # worker already finished, or the pool rejected above) never
+        # re-enters self._lock while submit() holds it.
+        ticket.add_done_callback(self._on_ticket_done)
         return ticket
 
     def run_all(self, requests: Sequence[api_types.SearchRequest]
@@ -196,9 +294,11 @@ class SearchService:
         return s
 
     def close(self) -> None:
-        self._closed = True
+        with self._lock:
+            self._closed = True
         self._pool.shutdown(wait=True)
         self.batcher.close()
+        self.cache.close()   # final flush for persistent caches
 
     def __enter__(self) -> "SearchService":
         return self
@@ -207,14 +307,28 @@ class SearchService:
         self.close()
 
     # -- worker -------------------------------------------------------------
+    _STATUS_KEY = {"done": "completed", "cancelled": "cancelled",
+                   "failed": "failed"}
+
+    def _on_ticket_done(self, ticket: SearchTicket) -> None:
+        """Single counting point for every way a ticket can finish --
+        worker completion, worker error, AND a queued-cancel that never
+        reaches a worker."""
+        key = self._STATUS_KEY[ticket.status]
+        if obs_state.enabled:
+            obs_instrument.SERVICE_REQUESTS.inc(status=key)
+        with self._lock:
+            self._counts[key] += 1
+
     def _run(self, ticket: SearchTicket) -> None:
+        if not ticket._begin():
+            return   # cancelled while queued: already finished and counted
         obs_instrument.SERVICE_ACTIVE.inc()
         sp = obs_trace.span("service.search", uid=ticket.uid,
                             method=ticket.request.method).__enter__()
         try:
             if ticket.cancelled:
                 raise SearchCancelled(f"search {ticket.uid} cancelled")
-            ticket.status = "running"
             sub = self._instrument(ticket)
             out = api_registry.run_search(sub)
             ticket._finish("done", outcome=out)
@@ -228,10 +342,6 @@ class SearchService:
         finally:
             obs_instrument.SERVICE_ACTIVE.dec()
         sp.set(status=key).__exit__(None, None, None)
-        if obs_state.enabled:
-            obs_instrument.SERVICE_REQUESTS.inc(status=key)
-        with self._lock:
-            self._counts[key] += 1
 
     def _instrument(self, ticket: SearchTicket) -> api_types.SearchRequest:
         """Wrap the request with progress recording, cancellation and --

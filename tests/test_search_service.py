@@ -7,6 +7,7 @@ call executed serially.  Everything else (hit/miss bookkeeping, ticket
 lifecycle, a cancelled request never stalling the batcher) is what makes
 the service operable.
 """
+import threading
 import time
 
 import numpy as np
@@ -14,7 +15,8 @@ import pytest
 
 from repro import api
 from repro.core import env as env_lib
-from repro.serving import (CostEvalBatcher, CostMemoCache, SearchCancelled,
+from repro.serving import (CostEvalBatcher, CostMemoCache,
+                           PersistentCostCache, SearchCancelled,
                            SearchService, ServiceConfig)
 from repro.serving.batcher import ROW_WIDTH
 
@@ -281,6 +283,269 @@ def test_closed_service_rejects_submissions():
     svc.close()
     with pytest.raises(RuntimeError, match="closed"):
         svc.submit(_req("random"))
+
+
+def test_submit_vs_close_race_every_ticket_terminates():
+    """Hammer submit() from several threads while close() runs.  Every
+    ticket submit() RETURNED must terminate -- the old unlocked _closed
+    check could count a ticket, hit the shut-down pool's RuntimeError and
+    leave result() blocking forever."""
+    svc = SearchService(ServiceConfig(max_workers=2))
+    tickets: list = []
+    tlock = threading.Lock()
+    stop = threading.Event()
+
+    def spam():
+        while not stop.is_set():
+            try:
+                t = svc.submit(_req("random", eps=30, seed=1))
+            except RuntimeError:
+                return          # service closed: the legal rejection path
+            with tlock:
+                tickets.append(t)
+
+    threads = [threading.Thread(target=spam) for _ in range(4)]
+    for th in threads:
+        th.start()
+    time.sleep(0.05)            # let submissions overlap the close
+    svc.close()
+    stop.set()
+    for th in threads:
+        th.join(timeout=60)
+        assert not th.is_alive()
+    assert tickets, "race window produced no accepted submissions"
+    for t in tickets:
+        assert t.done(), f"ticket {t.uid} leaked: status={t.status}"
+        assert t.status in ("done", "failed", "cancelled")
+        try:
+            t.result(timeout=1)     # must never block post-close
+        except Exception:  # noqa: BLE001 -- failed/cancelled is fine
+            pass
+    # Conservation: every accepted ticket finished exactly one way.
+    s = svc.stats()
+    assert s["submitted"] == len(tickets)
+    assert s["completed"] + s["failed"] + s["cancelled"] == len(tickets)
+
+
+def test_queued_cancel_finishes_without_waiting_for_worker():
+    """cancel() on a still-queued ticket resolves IMMEDIATELY -- not when
+    the saturated pool finally dequeues work it will only throw away."""
+    svc = SearchService(ServiceConfig(max_workers=1,
+                                      default_progress_every=50))
+    try:
+        blocker = svc.submit(_req("reinforce", eps=10_000_000))
+        queued = svc.submit(_req("random", eps=150, seed=1))
+        t0 = time.time()
+        queued.cancel()
+        with pytest.raises(SearchCancelled):
+            queued.result(timeout=5)
+        assert time.time() - t0 < 5.0
+        assert queued.status == "cancelled" and queued.done()
+        # The proof we didn't wait: the worker is still busy with the
+        # effectively-unbounded blocker.
+        assert not blocker.done()
+        blocker.cancel()
+        with pytest.raises(SearchCancelled):
+            blocker.result(timeout=120)
+        s = svc.stats()
+        assert s["cancelled"] == 2 and s["completed"] == 0
+    finally:
+        svc.close()
+
+
+def test_result_error_isolated_per_caller(svc):
+    """Concurrent result() callers each raise their OWN exception object:
+    re-raising one shared instance would let the callers mutate each
+    other's __traceback__ mid-flight."""
+    t = svc.submit(_req("random", eps=50, wl="no_such_workload"))
+    caught = []
+    clock = threading.Lock()
+
+    def grab():
+        try:
+            t.result(timeout=120)
+        except Exception as e:  # noqa: BLE001 -- the point of the test
+            with clock:
+                caught.append(e)
+
+    threads = [threading.Thread(target=grab) for _ in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120)
+    assert len(caught) == 2
+    e1, e2 = caught
+    assert e1 is not e2                      # per-caller copies ...
+    assert e1 is not t._error and e2 is not t._error
+    assert type(e1) is type(t._error) and e1.args == t._error.args
+    assert e1.__cause__ is t._error          # ... chained to the original,
+    assert e2.__cause__ is t._error          # whose traceback stays pinned
+    assert "no_such_workload" in str(e1)
+
+
+def test_batcher_close_fails_pending_when_dispatch_hangs():
+    """A dispatch thread hung inside _dispatch must not turn close() into
+    a silent strand: still-queued evaluations get a RuntimeError and the
+    leak is reported in stats."""
+    b = CostEvalBatcher(window_ms=0.0, dispatch_workers=1,
+                        join_timeout_s=0.2)
+    entered = threading.Event()
+    release = threading.Event()
+
+    def stuck_dispatch(items):
+        entered.set()
+        release.wait(60)            # simulates a wedged device dispatch
+        for it in items:
+            it.error = RuntimeError("released")
+            it.event.set()
+
+    b._dispatch = stuck_dispatch
+    errs = {}
+
+    def submit(name):
+        try:
+            b.evaluate(np.ones((1, 8), np.float32),
+                       np.ones((1, 1), np.float32),
+                       np.ones((1, 1), np.float32), np.float32(0), ECFG,
+                       np.float32(1.0))
+        except BaseException as e:  # noqa: BLE001
+            errs[name] = e
+
+    ta = threading.Thread(target=submit, args=("hung",))
+    ta.start()
+    assert entered.wait(timeout=60)      # dispatcher is now wedged
+    tb = threading.Thread(target=submit, args=("stranded",))
+    tb.start()
+    deadline = time.time() + 60
+    while time.time() < deadline:        # wait for b's item to queue up
+        with b._cv:
+            if b._pending:
+                break
+        time.sleep(0.005)
+    b.close()
+    assert b.stats()["leaked_dispatch_threads"] == 1
+    tb.join(timeout=60)
+    assert isinstance(errs["stranded"], RuntimeError)
+    assert "hung dispatch" in str(errs["stranded"])
+    release.set()                        # unwedge; the hung item resolves
+    ta.join(timeout=60)
+    assert "released" in str(errs["hung"])
+
+
+def test_batcher_clean_close_reports_zero_leaks():
+    b = CostEvalBatcher(dispatch_workers=2)
+    b.close()
+    assert b.stats()["leaked_dispatch_threads"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Persistent cost cache.
+# ---------------------------------------------------------------------------
+def test_persistent_cache_round_trip(tmp_path):
+    """Entries written by one cache incarnation are served by the next:
+    flush on close, vectorized reload on open, 100% hit rate."""
+    d = str(tmp_path / "cache")
+    keys = [np.arange(i, i + 3, dtype=np.float32).tobytes()
+            for i in range(10)]
+    vals = [np.arange(4, dtype=np.float32) + i for i in range(10)]
+    c = PersistentCostCache(d, version="v1", flush_every=1000)
+    c.put_many(keys, vals)
+    assert c.stats()["pending_flush"] == 10      # buffered, not yet on disk
+    c.close()
+    assert c.stats()["pending_flush"] == 0 and c.persisted == 10
+
+    c2 = PersistentCostCache(d, version="v1")
+    assert len(c2) == 10 and c2.shards_loaded == 1
+    values, miss = c2.get_many(keys)
+    assert miss == [] and c2.hit_rate == 1.0
+    for v, want in zip(values, vals):
+        np.testing.assert_array_equal(v, want)
+
+    # Re-inserting loaded entries is not "fresh": nothing new flushes.
+    c2.put_many(keys, vals)
+    assert c2.stats()["pending_flush"] == 0
+    c2.close()
+
+
+def test_persistent_cache_version_invalidates(tmp_path):
+    """The version namespace is the directory: a cost-model edit opens an
+    empty store instead of serving stale tuples."""
+    d = str(tmp_path / "cache")
+    keys = [bytes([i, i + 1]) for i in range(4)]
+    vals = [np.full(4, i, np.float32) for i in range(4)]
+    c = PersistentCostCache(d, version="model-a")
+    c.put_many(keys, vals)
+    c.close()
+    other = PersistentCostCache(d, version="model-b")
+    assert len(other) == 0 and other.shards_loaded == 0
+    _, miss = other.get_many(keys)
+    assert miss == list(range(4))
+    other.close()
+
+
+def test_persistent_cache_skips_corrupt_shards(tmp_path):
+    import os
+
+    d = str(tmp_path / "cache")
+    keys = [bytes([i, i, i]) for i in range(6)]
+    vals = [np.full(4, float(i), np.float32) for i in range(6)]
+    c = PersistentCostCache(d, version="v1")
+    c.put_many(keys[:3], vals[:3])
+    c.flush()
+    c.put_many(keys[3:], vals[3:])
+    c.flush()
+    c.close()
+    shard_dir = os.path.join(d, "v1")
+    shards = sorted(n for n in os.listdir(shard_dir) if n.endswith(".bin"))
+    assert len(shards) == 2
+    # Truncate one shard mid-body and drop in one garbage file.
+    victim = os.path.join(shard_dir, shards[0])
+    with open(victim, "rb") as f:
+        blob = f.read()
+    with open(victim, "wb") as f:
+        f.write(blob[:-5])
+    with open(os.path.join(shard_dir, "shard-999-000000.bin"), "wb") as f:
+        f.write(b"not a shard at all")
+
+    c2 = PersistentCostCache(d, version="v1")
+    assert c2.corrupt_shards == 2
+    assert c2.shards_loaded == 1 and len(c2) == 3    # survivors still serve
+    values, miss = c2.get_many(keys)
+    assert len(miss) == 3
+    for i in (3, 4, 5):
+        np.testing.assert_array_equal(values[i], vals[i])
+    c2.close()
+
+
+def test_service_warm_restart_serves_fully_from_disk(tmp_path):
+    """ServiceConfig.cache_dir end to end: a restarted service re-runs the
+    same query with ZERO fresh evaluations and identical bytes."""
+    d = str(tmp_path / "cache")
+    svc1 = SearchService(ServiceConfig(max_workers=2, cache_dir=d))
+    try:
+        want = svc1.submit(_req("random", eps=200, seed=5)).result(
+            timeout=300)
+        s1 = svc1.stats()
+        assert s1["fresh_points"] > 0
+        assert isinstance(svc1.cache, PersistentCostCache)
+    finally:
+        svc1.close()          # final flush happens here
+    assert s1["fresh_points"] >= 0
+
+    svc2 = SearchService(ServiceConfig(max_workers=2, cache_dir=d))
+    try:
+        assert len(svc2.cache) > 0               # warm from disk
+        got = svc2.submit(_req("random", eps=200, seed=5)).result(
+            timeout=300)
+        s2 = svc2.stats()
+        assert s2["cache_misses"] == 0 and s2["fresh_points"] == 0
+        assert s2["cache_hit_rate"] == 1.0       # 100% warm
+        assert got.best_value == want.best_value
+        assert got.history.tobytes() == want.history.tobytes()
+        np.testing.assert_array_equal(got.pe, want.pe)
+        np.testing.assert_array_equal(got.kt, want.kt)
+    finally:
+        svc2.close()
 
 
 # ---------------------------------------------------------------------------

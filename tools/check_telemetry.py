@@ -31,10 +31,12 @@ import sys
 
 SPAN_REQUIRED_KEYS = ("name", "ts_us", "dur_us", "tid", "depth")
 
-# name{labels} value  -- labels optional; value is any float repr.
+# name{labels} value  -- labels optional; value is any float repr.  The
+# labels group is greedy up to the LAST closing brace: label values may
+# themselves contain braces (e.g. route="/v1/search/{uid}").
 _SAMPLE_RE = re.compile(
     r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
-    r'(?P<labels>\{[^}]*\})?'
+    r'(?P<labels>\{.*\})?'
     r' (?P<value>[0-9eE+.inf-]+)$')
 _LABEL_RE = re.compile(r'(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>[^"]*)"')
 
